@@ -1,0 +1,47 @@
+"""Paper Fig. 2: IoT ingestion rate (Cyprus: ~500 sensors, ~15M readings per
+month ~ 1.4K/hour sustained with parallel senders). We measure the store's
+ingest throughput with concurrent sensor threads."""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.timeseries.store import TimeSeriesStore
+
+from .common import Row
+
+N_SENSORS = 64
+READINGS = 2_000          # per sensor
+
+
+def run() -> list[Row]:
+    store = TimeSeriesStore()
+    rng = np.random.default_rng(0)
+    payloads = {f"s{i}": (np.sort(rng.uniform(0, 1e6, READINGS)),
+                          rng.normal(size=READINGS))
+                for i in range(N_SENSORS)}
+
+    def sender(ts_id, t, v):
+        # irregular batches, as devices submit in parallel
+        for lo in range(0, READINGS, 100):
+            store.append(ts_id, t[lo:lo + 100], v[lo:lo + 100])
+
+    threads = [threading.Thread(target=sender, args=(k, t, v))
+               for k, (t, v) in payloads.items()]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    total = N_SENSORS * READINGS
+    assert store.total_points() == total
+    rate = total / wall
+    # verify sorted reads survived parallel ingest
+    t, v = store.read("s0")
+    assert np.all(np.diff(t) >= 0)
+    return [("fig2_ingestion", wall / total * 1e6,
+             f"readings_per_s={rate:,.0f}_sensors={N_SENSORS}"
+             f"_paper=1.4k_per_hour_sustained")]

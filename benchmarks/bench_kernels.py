@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: XLA path wall time on CPU (the Pallas TPU path is
+validated for correctness in interpret mode; its perf characteristics are
+derived in the §Roofline analysis, since no TPU is attached)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.fleet_mlp.ops import fleet_mlp
+from repro.kernels.mamba2_scan.ops import ssd_scan
+from repro.kernels.rwkv6_scan.ops import wkv6_scan
+
+from .common import Row, timed
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(0)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)  # noqa: E731
+    rows: list[Row] = []
+
+    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    q, k, v = mk(B, S, H, D), mk(B, S, KV, D), mk(B, S, KV, D)
+    out, dt = timed(lambda: flash_attention(q, k, v).block_until_ready(),
+                    repeat=3)
+    flops = 4 * B * S * S * H * D / 2
+    rows.append(("kernel_flash_attention_xla", dt * 1e6,
+                 f"gflops_s={flops/dt/1e9:.1f}"))
+
+    qd, kc, vc = mk(B * 8, H, D), mk(B * 8, S, KV, D), mk(B * 8, S, KV, D)
+    lens = jnp.full((B * 8,), S, jnp.int32)
+    out, dt = timed(lambda: decode_attention(qd, kc, vc, lens)
+                    .block_until_ready(), repeat=5)
+    bytes_ = 2 * B * 8 * S * KV * D * 4
+    rows.append(("kernel_decode_attention_xla", dt * 1e6,
+                 f"gbytes_s={bytes_/dt/1e9:.1f}"))
+
+    Bs, Ss, Hs, P, N = 1, 512, 4, 32, 32
+    x = mk(Bs, Ss, Hs, P)
+    dts = jnp.asarray(rng.uniform(1e-3, 0.1, (Bs, Ss, Hs)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, (Hs,)), jnp.float32)
+    Bm, Cm = mk(Bs, Ss, 1, N), mk(Bs, Ss, 1, N)
+    Dh = mk(Hs)
+    out, dt = timed(lambda: jax.block_until_ready(
+        ssd_scan(x, dts, A, Bm, Cm, Dh)), repeat=3)
+    rows.append(("kernel_mamba2_scan_xla", dt * 1e6,
+                 f"tokens_s={Bs*Ss/dt:,.0f}"))
+
+    r_, k_, v_ = mk(Bs, Ss, Hs, N), mk(Bs, Ss, Hs, N), mk(Bs, Ss, Hs, N)
+    w_ = jnp.asarray(rng.uniform(0.4, 0.999, (Bs, Ss, Hs, N)), jnp.float32)
+    u_ = mk(Hs, N)
+    out, dt = timed(lambda: jax.block_until_ready(
+        wkv6_scan(r_, k_, v_, w_, u_)), repeat=3)
+    rows.append(("kernel_rwkv6_scan_xla", dt * 1e6,
+                 f"tokens_s={Bs*Ss/dt:,.0f}"))
+
+    N_, b_, F_, Hd = 256, 1, 54, 64
+    xm = mk(N_, b_, F_)
+    ws = [mk(N_, F_, Hd), mk(N_, Hd, Hd), mk(N_, Hd, 1)]
+    bs = [mk(N_, Hd), mk(N_, Hd), mk(N_, 1)]
+    out, dt = timed(lambda: fleet_mlp(xm, ws, bs).block_until_ready(),
+                    repeat=5)
+    rows.append(("kernel_fleet_mlp_xla", dt * 1e6,
+                 f"models_s={N_/dt:,.0f}"))
+    return rows

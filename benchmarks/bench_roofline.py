@@ -1,0 +1,108 @@
+"""Roofline table from the multi-pod dry-run artifacts (§Roofline of
+EXPERIMENTS.md): per (arch x shape x mesh) the three terms, the dominant
+bottleneck, MODEL_FLOPS and the useful-compute ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.arch import model as M
+from repro.configs import SHAPES, get_config
+
+from .common import Row
+
+ART = Path("artifacts/dryrun")
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def model_min_bytes_per_device(arch: str, shape_name: str, n_dev: int) -> float:
+    """Decode lower bound on HBM traffic: every active weight read once per
+    step (bf16) + the full KV/recurrent state read once."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    wbytes = 2.0 * M.active_param_count(cfg)
+    cache = 0.0
+    if cfg.has_attention:
+        n_attn = (sum(k in ("attn", "attn_moe") for k in cfg.pattern)
+                  * cfg.num_periods
+                  + (cfg.num_periods if cfg.shared_attn_every_period else 0))
+        cache += (2.0 * n_attn * shape.global_batch * shape.seq_len
+                  * cfg.num_kv_heads * cfg.head_dim * 2)
+    if "mamba2" in cfg.pattern:
+        n_m = sum(k == "mamba2" for k in cfg.pattern) * cfg.num_periods
+        cache += (4.0 * n_m * shape.global_batch * cfg.ssm_heads
+                  * cfg.ssm_head_dim * cfg.ssm_state)
+    if "rwkv6" in cfg.pattern:
+        n_r = sum(k == "rwkv6" for k in cfg.pattern) * cfg.num_periods
+        cache += (4.0 * n_r * shape.global_batch * cfg.rwkv_heads
+                  * cfg.rwkv_head_size ** 2)
+    return (wbytes + cache) / n_dev
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_dev: int) -> float:
+    """6*N*D train (active params for MoE); 2*N*B + KV reads for decode."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = M.active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens / n_dev
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens / n_dev
+    # decode: one token per request + attention over the KV cache
+    flops = 2.0 * n_active * shape.global_batch
+    if cfg.has_attention:
+        n_attn = sum(k in ("attn", "attn_moe") for k in cfg.pattern) \
+            * cfg.num_periods + (cfg.num_periods
+                                 if cfg.shared_attn_every_period else 0)
+        kv_dim = cfg.num_kv_heads * cfg.head_dim
+        flops += (4.0 * shape.global_batch * shape.seq_len * kv_dim
+                  * (cfg.num_heads // max(cfg.num_kv_heads, 1)) * n_attn)
+    return flops / n_dev
+
+
+def rows_from_artifacts(mesh_tag: str = "pod") -> list[dict]:
+    out = []
+    for f in sorted(ART.glob(f"*__{mesh_tag}.json")):
+        r = json.loads(f.read_text())
+        rl = r["roofline"]
+        n_dev = r["n_devices"]
+        mf = model_flops_per_device(r["arch"], r["shape"], n_dev)
+        hlo = r["hlo_cost"]["flops"]
+        bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        kind = SHAPES[r["shape"]].kind
+        if kind == "decode":
+            # decode is bandwidth-bound by nature: fraction = minimal
+            # achievable HBM time / achieved bound (not MFU)
+            mb = model_min_bytes_per_device(r["arch"], r["shape"], n_dev)
+            frac = (mb / HBM_BW) / bound if bound else 0.0
+        else:
+            frac = (mf / PEAK_FLOPS) / bound if bound else 0.0
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": mesh_tag,
+            "kind": kind,
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "model_flops_dev": mf, "hlo_flops_dev": hlo,
+            "useful_ratio": mf / hlo if hlo else 0.0,
+            "roofline_fraction": frac,
+            "mem_gib": r["memory"]["peak_per_device_bytes"] / 2**30,
+        })
+    return out
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for rec in rows_from_artifacts("pod"):
+        rows.append((
+            f"roofline_{rec['arch']}__{rec['shape']}",
+            max(rec["compute_s"], rec["memory_s"], rec["collective_s"]) * 1e6,
+            f"dom={rec['dominant'][:-2]}_cmp={rec['compute_s']*1e3:.1f}ms"
+            f"_mem={rec['memory_s']*1e3:.1f}ms"
+            f"_col={rec['collective_s']*1e3:.1f}ms"
+            f"_useful={rec['useful_ratio']:.2f}"
+            f"_roofline_frac={rec['roofline_fraction']:.3f}"))
+    if not rows:
+        rows.append(("roofline_missing", 0.0,
+                     "run python -m repro.launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,28 @@
+"""Shared benchmark scaffolding: each bench returns rows of
+(name, us_per_call, derived) which run.py prints as CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def build_smartgrid(n_prosumers=8, n_feeders=2, n_substations=1, seed=3,
+                    days=45):
+    from repro.core import Castor
+    from repro.timeseries.ingest import SiteSpec, build_site
+    DAY = 86400.0
+    c = Castor()
+    info = build_site(c, SiteSpec("B", n_prosumers, n_feeders, n_substations,
+                                  seed=seed), t0=0.0, t1=days * DAY)
+    return c, info

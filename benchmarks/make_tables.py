@@ -1,0 +1,74 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts.   PYTHONPATH=src python -m benchmarks.make_tables [> section.md]"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+
+from .bench_roofline import rows_from_artifacts
+
+ART = Path("artifacts/dryrun")
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | compile_s | mem/dev GiB | flops/dev | "
+             "bytes/dev | coll wire/dev | top collectives |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        h = r["hlo_cost"]
+        colls = sorted(h["collectives"].items(), key=lambda kv: -kv[1])[:2]
+        cstr = " ".join(f"{k}:{v/2**30:.1f}GiB" for k, v in colls)
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['t_compile_s']:.1f} "
+            f"| {r['memory']['peak_per_device_bytes']/2**30:.2f} "
+            f"| {h['flops']/1e12:.2f}T | {h['bytes']/2**30:.1f}GiB "
+            f"| {h['collective_wire_bytes']/2**30:.2f}GiB | {cstr} |")
+    return "\n".join(lines)
+
+
+def skip_table() -> str:
+    lines = ["| arch | shape | status |", "|---|---|---|"]
+    for a in list_archs():
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = shape_applicable(cfg, s)
+            if not ok:
+                lines.append(f"| {a} | {s.name} | SKIP — {why} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="pod") -> str:
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+             "| useful FLOP ratio | roofline fraction | what moves the "
+             "dominant term |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    hints = {
+        ("memory_s", "train"): "flash-attn kernel kills S^2 score traffic; SP shards saved activations",
+        ("memory_s", "prefill"): "flash-attn kernel; bf16 residuals",
+        ("memory_s", "decode"): "keep KV cache resident: batch-sharded cache, no S-gather",
+        ("collective_s", "train"): "bf16 TP collectives; sequence-parallel reduce-scatter",
+        ("collective_s", "prefill"): "bf16 collectives; SP",
+        ("collective_s", "decode"): "shard-resident decode: partial-softmax all-reduce of (B,H,2) stats",
+        ("compute_s", "train"): "less remat recompute (policy: save dots)",
+    }
+    for r in rows_from_artifacts(mesh):
+        hint = hints.get((r["dominant"], r["kind"]), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant'][:-2]}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {hint} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("### Skipped cells\n")
+    print(skip_table())
+    print("\n### Dry-run artifacts (both meshes)\n")
+    print(dryrun_table())
+    print("\n### Roofline (single-pod 16x16, per device)\n")
+    print(roofline_table("pod"))

@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure (+ kernels +
+roofline). Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_fig2_ingestion, bench_fig4_transform,
+                   bench_kernels, bench_roofline, bench_table1_models,
+                   bench_table2_sites, bench_table3_scalability)
+    benches = [
+        ("fig2", bench_fig2_ingestion),
+        ("fig4", bench_fig4_transform),
+        ("table1", bench_table1_models),
+        ("table2", bench_table2_sites),
+        ("table3", bench_table3_scalability),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in benches:
+        t0 = time.time()
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{tag}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        else:
+            print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} bench group(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import layers, mamba2, model, moe, params, rwkv6  # noqa: F401

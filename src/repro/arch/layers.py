@@ -1,0 +1,233 @@
+"""Shared transformer layers: norms, RoPE / M-RoPE, GQA attention, MLPs.
+
+All functions are pure; parameters come in as pytrees built by the matching
+``*_specs`` builders. Compute dtype follows the inputs (bf16), accumulation
+and softmax in f32 inside the attention kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.flash_attention.ops import flash_attention
+from ..kernels.decode_attention.ops import decode_attention
+from .params import ParamSpec
+
+# ---------------------------------------------------------------- norms
+
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), "ones"),
+                "bias": ParamSpec((d,), ("embed",), "zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), "ones")}
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm (Qwen3): x (..., D), scale (D,)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+# ---------------------------------------------------------------- RoPE
+
+def mrope_sections(head_dim: int):
+    """Half-dim split for Qwen2-VL M-RoPE (t/h/w). 128 -> (16, 24, 24)."""
+    half = head_dim // 2
+    a = half // 4
+    b = (half - a) // 2
+    return (a, b, half - a - b)
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float, *, mrope: bool = False):
+    """x: (B, S, H, D); positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the half-dim frequency spectrum is PARTITIONED into
+    (temporal, height, width) sections; each section keeps its slice of the
+    full spectrum but rotates by its own position stream.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    if mrope:
+        freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+        secs = mrope_sections(D)
+        parts_c, parts_s = [], []
+        off = 0
+        for i, sec in enumerate(secs):
+            ang = positions[i].astype(jnp.float32)[..., None] * freqs[off:off + sec]
+            parts_c.append(jnp.cos(ang))
+            parts_s.append(jnp.sin(ang))
+            off += sec
+        cos = jnp.concatenate(parts_c, -1)
+        sin = jnp.concatenate(parts_s, -1)
+    else:
+        cos, sin = _rope_angles(positions, D, theta)
+    cos = cos[:, :, None, :]                         # (B,S,1,half)
+    sin = sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+# ---------------------------------------------------------------- attention
+
+def attention_specs(cfg: ModelConfig, d_in: Optional[int] = None):
+    """Projections are stored FUSED over (H*hd): the fused dim is always
+    divisible by the 16-way model axis even when the head count is not
+    (28/36/40-head archs), which jit in_shardings require. The head structure
+    is recovered by a reshape inside the layer (GSPMD pads intermediates)."""
+    d = d_in or cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    sp = {
+        "wq": ParamSpec((d, H * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, KV * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, KV * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((H * hd, cfg.d_model), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        sp["q_norm"] = ParamSpec((hd,), (None,), "ones")
+        sp["k_norm"] = ParamSpec((hd,), (None,), "ones")
+    if cfg.norm == "layernorm":                      # bias-ful archs
+        sp["bq"] = ParamSpec((H * hd,), ("heads",), "zeros")
+        sp["bk"] = ParamSpec((KV * hd,), ("kv_heads",), "zeros")
+        sp["bv"] = ParamSpec((KV * hd,), ("kv_heads",), "zeros")
+        sp["bo"] = ParamSpec((cfg.d_model,), ("embed",), "zeros")
+    return sp
+
+
+def _project_qkv(cfg, p, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def attention_block(cfg: ModelConfig, p, x, positions):
+    """Full-sequence attention (train / prefill).
+
+    x: (B, S, d_in) normed input (d_in may exceed d_model for the Zamba2
+    shared block, which projects q/k/v from a concat input). Returns
+    (out (B,S,d_model), (k, v)) so prefill can populate caches.
+    """
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta, mrope=cfg.use_mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, mrope=cfg.use_mrope)
+    o = flash_attention(q, k, v, causal=cfg.causal)
+    B, S = o.shape[:2]
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1),
+                     p["wo"].astype(x.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def attention_decode(cfg: ModelConfig, p, x, kstack, vstack, layer, lengths,
+                     dist=None, in_place: bool = True):
+    """One-token decode against STACKED caches (periods, B, S, KV, hd).
+
+    Scatter-writes the new k/v at (layer, batch, lengths) — an in-place
+    update touching only B rows, never rewriting the cache — then attends
+    over lengths+1. Returns (out (B,1,d_model), new kstack, new vstack).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x)                # (B,1,H/KV,hd)
+    pos = lengths[:, None]                           # (B,1)
+    if cfg.use_mrope:
+        pos3 = jnp.broadcast_to(lengths[None, :, None], (3, B, 1))
+        q = apply_rope(q, pos3, cfg.rope_theta, mrope=True)
+        k = apply_rope(k, pos3, cfg.rope_theta, mrope=True)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+
+    b_idx = jnp.arange(B)
+    if in_place:
+        kstack = kstack.at[layer, b_idx, lengths].set(k[:, 0].astype(kstack.dtype))
+        vstack = vstack.at[layer, b_idx, lengths].set(v[:, 0].astype(vstack.dtype))
+        ck = jax.lax.dynamic_index_in_dim(kstack, layer, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(vstack, layer, 0, keepdims=False)
+    else:   # stacks are actually single-layer slices (legacy path)
+        ck = kstack.at[b_idx, lengths].set(k[:, 0].astype(kstack.dtype))
+        cv = vstack.at[b_idx, lengths].set(v[:, 0].astype(vstack.dtype))
+        kstack, vstack = ck, cv
+    if dist is not None:
+        from ..kernels.decode_attention.distributed import (
+            decode_attention_distributed)
+        o = decode_attention_distributed(q[:, 0], ck, cv, lengths + 1,
+                                         mesh=dist["mesh"],
+                                         seq_axis=dist.get("seq_axis", "model"),
+                                         batch_axes=dist.get("batch_axes", ("data",)))
+    else:
+        o = decode_attention(q[:, 0], ck, cv, lengths + 1)
+    out = jnp.einsum("be,ed->bd", o.reshape(B, -1), p["wo"].astype(x.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out[:, None], kstack, vstack
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_specs(cfg: ModelConfig, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    ff = cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"w_gate": ParamSpec((d, ff), ("embed", "mlp")),
+                "w_up": ParamSpec((d, ff), ("embed", "mlp")),
+                "w_down": ParamSpec((ff, cfg.d_model), ("mlp", "embed"))}
+    sp = {"w_in": ParamSpec((d, ff), ("embed", "mlp")),
+          "w_down": ParamSpec((ff, cfg.d_model), ("mlp", "embed"))}
+    if cfg.norm == "layernorm":
+        sp["b_in"] = ParamSpec((ff,), ("mlp",), "zeros")
+        sp["b_down"] = ParamSpec((cfg.d_model,), ("embed",), "zeros")
+    return sp
+
+
+def mlp_block(cfg: ModelConfig, p, x):
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+        if "b_in" in p:
+            h = h + p["b_in"].astype(x.dtype)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    if "b_down" in p:
+        out = out + p["b_down"].astype(x.dtype)
+    return out

@@ -1,0 +1,109 @@
+"""Mamba2 (SSD) block: in_proj -> causal depthwise conv -> selective SSD scan
+-> gated RMSNorm -> out_proj. Train/prefill use the chunked SSD kernel;
+decode carries (conv_state, ssd_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.mamba2_scan.ops import ssd_scan
+from ..kernels.mamba2_scan.ref import ssd_decode_step
+from .params import ParamSpec
+
+_G = 1  # ssm groups (ngroups=1 for all assigned archs)
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_ch = di + 2 * _G * N                 # conv runs over [x, B, C]
+    proj = 2 * di + 2 * _G * N + H            # [z, x, B, C, dt]
+    return di, H, N, conv_ch, proj
+
+
+def mamba2_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    di, H, N, conv_ch, proj = _dims(cfg)
+    return {
+        "in_proj": ParamSpec((d, proj), ("embed", "mamba_proj")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), (None, "ssm_inner"), "uniform_small", 0.5),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), "zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), "ssm_A"),
+        "D": ParamSpec((H,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), "ssm_dt"),
+        "norm_scale": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, H, N, _, _ = _dims(cfg)
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + _G * N, 2 * di + 2 * _G * N], axis=-1)
+    return z, x, Bm, Cm, dt
+
+
+def _gated_rmsnorm(scale, y, z, eps=1e-5):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), -1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_block(cfg: ModelConfig, p, x, init_state=None, *, chunk: int = 64):
+    """x: (B, S, d). Returns (out (B,S,d), (conv_state, ssd_state))."""
+    B, S, _ = x.shape
+    di, H, N, conv_ch, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+
+    # causal depthwise conv over [x, B, C]
+    xbc = jnp.concatenate([xs, Bm, Cm], -1)                        # (B,S,conv_ch)
+    cw = p["conv_w"].astype(x.dtype)                               # (w, conv_ch)
+    pad = jnp.pad(xbc, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * cw[i][None, None]
+               for i in range(cfg.ssm_conv))
+    conv = jax.nn.silu((conv + p["conv_b"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv, [di, di + _G * N], axis=-1)
+
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssd_state = ssd_scan(xh, dt, A,
+                            Bm.reshape(B, S, _G, N), Cm.reshape(B, S, _G, N),
+                            p["D"].astype(jnp.float32),
+                            init_state, chunk=chunk)
+    y = y.reshape(B, S, di)
+    y = _gated_rmsnorm(p["norm_scale"], y, z)
+    out = jnp.einsum("bsv,vd->bsd", y, p["out_proj"].astype(x.dtype))
+    conv_state = xbc[:, S - (cfg.ssm_conv - 1):]                   # pre-activation tail
+    return out, (conv_state, ssd_state)
+
+
+def mamba2_decode(cfg: ModelConfig, p, x, state):
+    """One token. x: (B, 1, d); state = (conv_state (B,w-1,conv_ch),
+    ssd_state (B,H,P,N)). Returns (out (B,1,d), new_state)."""
+    B = x.shape[0]
+    di, H, N, conv_ch, _ = _dims(cfg)
+    conv_state, ssd_state = state
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+
+    xbc = jnp.concatenate([xs, Bm, Cm], -1)[:, 0]                  # (B,conv_ch)
+    win = jnp.concatenate([conv_state, xbc[:, None]], 1)           # (B,w,conv_ch)
+    cw = p["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("bwc,wc->bc", win, cw) + p["conv_b"].astype(x.dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs1, Bm1, Cm1 = jnp.split(conv, [di, di + _G * N], axis=-1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_ssd = ssd_decode_step(
+        ssd_state, xs1.reshape(B, H, cfg.ssm_head_dim), dt1, A,
+        Bm1.reshape(B, _G, N), Cm1.reshape(B, _G, N), p["D"].astype(jnp.float32))
+    y = y.reshape(B, 1, di)
+    y = _gated_rmsnorm(p["norm_scale"], y, z)
+    out = jnp.einsum("bsv,vd->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (win[:, 1:], new_ssd)

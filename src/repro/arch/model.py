@@ -1,0 +1,429 @@
+"""Unified LM builder: one scan-over-superblocks code path for all 10
+assigned architectures (dense / GQA / MoE / Mamba2-hybrid / RWKV6 / encoder).
+
+Public surface:
+    build_param_specs(cfg)            ParamSpec pytree (dry-run & init)
+    init_params(cfg, key)             materialised f32 params
+    forward(cfg, params, batch, ...)  logits (train/prefill)
+    train_loss(cfg, params, batch)    scalar CE (+ MoE aux)
+    decode_state_specs(cfg, B, S)     ShapeDtypeStruct pytree of decode state
+    init_decode_state(cfg, B, S)      zeroed decode state
+    decode_step(cfg, params, state, batch)  (logits, new_state)
+    param_count(cfg)                  exact parameter count
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers, mamba2, moe, rwkv6
+from .params import (ParamSpec, init_tree, param_count as _spec_count,
+                     shape_structs, stack_specs)
+
+_IDShard = lambda x, names: x   # noqa: E731  (default no-op shard hook)
+
+
+# ------------------------------------------------------------------ specs
+
+def _block_specs(cfg: ModelConfig, kind: str):
+    if kind == "attn":
+        return {"ln1": layers.norm_specs(cfg), "attn": layers.attention_specs(cfg),
+                "ln2": layers.norm_specs(cfg), "mlp": layers.mlp_specs(cfg)}
+    if kind == "attn_moe":
+        return {"ln1": layers.norm_specs(cfg), "attn": layers.attention_specs(cfg),
+                "ln2": layers.norm_specs(cfg), "moe": moe.moe_specs(cfg)}
+    if kind == "mamba2":
+        return {"ln1": layers.norm_specs(cfg), "mixer": mamba2.mamba2_specs(cfg)}
+    if kind == "rwkv6":
+        return {"ln1": layers.norm_specs(cfg), "tm": rwkv6.timemix_specs(cfg),
+                "ln2": layers.norm_specs(cfg), "cm": rwkv6.channelmix_specs(cfg)}
+    raise ValueError(kind)
+
+
+def _shared_block_specs(cfg: ModelConfig):
+    d2 = 2 * cfg.d_model
+    return {"ln1": layers.norm_specs(cfg, d2),
+            "attn": layers.attention_specs(cfg, d_in=d2),
+            "ln2": layers.norm_specs(cfg, d2),
+            "mlp": layers.mlp_specs(cfg, d_in=d2)}
+
+
+def build_param_specs(cfg: ModelConfig):
+    period = {f"pos{i}": _block_specs(cfg, kind)
+              for i, kind in enumerate(cfg.pattern)}
+    specs = {"blocks": stack_specs(period, cfg.num_periods),
+             "final_norm": layers.norm_specs(cfg)}
+    if cfg.frontend != "frames":
+        specs["embed"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", "embed"), "embed")
+    if "rwkv6" in cfg.pattern:
+        specs["ln0"] = layers.norm_specs(cfg)
+    if cfg.shared_attn_every_period:
+        specs["shared"] = _shared_block_specs(cfg)
+    if not (cfg.tie_embeddings and cfg.frontend != "frames"):
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"), "normal")
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return _spec_count(build_param_specs(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k + shared experts only)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    e_specs = moe.moe_specs(cfg)
+    per_expert = _spec_count({k: e_specs[k] for k in ("w_gate", "w_up", "w_down")})
+    n_moe_layers = cfg.num_periods * sum(k == "attn_moe" for k in cfg.pattern)
+    inactive = per_expert * (1 - cfg.num_experts_per_tok / cfg.num_experts)
+    return int(total - n_moe_layers * inactive)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    return init_tree(build_param_specs(cfg), key, dtype)
+
+
+def param_shape_structs(cfg: ModelConfig, dtype=jnp.float32):
+    return shape_structs(build_param_specs(cfg), dtype)
+
+
+# ------------------------------------------------------------------ embed
+
+def _embed(cfg: ModelConfig, params, batch, dtype):
+    if cfg.frontend == "frames":
+        return batch["frames"].astype(dtype)
+    emb = params["embed"].astype(dtype)
+    h = jnp.take(emb, batch["tokens"], axis=0)
+    if cfg.frontend == "patches" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(dtype)
+        h = jnp.concatenate([ve, h[:, ve.shape[1]:]], axis=1)
+    return h
+
+
+def _positions(cfg: ModelConfig, batch, B, S):
+    if cfg.use_mrope:
+        if "positions" in batch:
+            return batch["positions"]
+        base = jnp.arange(S)[None].repeat(B, 0)
+        return jnp.stack([base] * 3)
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+def _unembed(cfg: ModelConfig, params, h):
+    if cfg.tie_embeddings and "embed" in params:
+        w = params["embed"].astype(h.dtype).T
+    else:
+        w = params["lm_head"].astype(h.dtype)
+    return jnp.einsum("...d,dv->...v", h, w)
+
+
+# ------------------------------------------------------------------ blocks
+
+def _apply_block(cfg, kind, p, h, positions, emb0, shard, moe_path,
+                 moe_groups=0):
+    """Full-sequence application. Returns (h, cache, aux)."""
+    aux = {}
+    cache = None
+    if kind in ("attn", "attn_moe"):
+        a, (k, v) = layers.attention_block(cfg, p["attn"],
+                                           layers.apply_norm(cfg, p["ln1"], h),
+                                           positions)
+        h = h + a
+        if kind == "attn":
+            h = h + layers.mlp_block(cfg, p["mlp"],
+                                     layers.apply_norm(cfg, p["ln2"], h))
+        else:
+            m, aux = moe.moe_block(cfg, p["moe"],
+                                   layers.apply_norm(cfg, p["ln2"], h),
+                                   path=moe_path, shard=shard,
+                                   groups=moe_groups)
+            h = h + m
+        cache = {"k": k, "v": v}
+    elif kind == "mamba2":
+        m, (conv_s, ssd_s) = mamba2.mamba2_block(
+            cfg, p["mixer"], layers.apply_norm(cfg, p["ln1"], h))
+        h = h + m
+        cache = {"conv": conv_s, "ssd": ssd_s}
+    elif kind == "rwkv6":
+        x_prev0 = jnp.zeros((h.shape[0], h.shape[2]), h.dtype)
+        t, x_tm, wkv = rwkv6.timemix_block(
+            cfg, p["tm"], layers.apply_norm(cfg, p["ln1"], h), x_prev0)
+        h = h + t
+        c, x_cm = rwkv6.channelmix_block(
+            cfg, p["cm"], layers.apply_norm(cfg, p["ln2"], h), x_prev0)
+        h = h + c
+        cache = {"x_tm": x_tm, "x_cm": x_cm, "wkv": wkv}
+    else:
+        raise ValueError(kind)
+    return h, cache, aux
+
+
+def _apply_shared(cfg, p, h, emb0, positions):
+    """Zamba2 weight-shared attention+MLP block on concat(h, emb0)."""
+    cat = jnp.concatenate([h, emb0], axis=-1)
+    a, (k, v) = layers.attention_block(cfg, p["attn"],
+                                       layers.apply_norm(cfg, p["ln1"], cat),
+                                       positions)
+    h = h + a
+    cat = jnp.concatenate([h, emb0], axis=-1)
+    h = h + layers.mlp_block(cfg, p["mlp"], layers.apply_norm(cfg, p["ln2"], cat))
+    return h, {"k": k, "v": v}
+
+
+# ------------------------------------------------------------------ forward
+
+def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
+            shard: Callable = _IDShard, remat: bool = True,
+            moe_path: str = "dispatch", scan_unroll: int = 1,
+            moe_groups: int = 0):
+    """Full-sequence forward. mode: "train" -> logits (B,S,V);
+    "prefill" -> (last-token logits (B,V), decode_state)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "frames":
+        B, S = batch["frames"].shape[:2]
+    else:
+        B, S = batch["tokens"].shape
+    h = shard(_embed(cfg, params, batch, dtype), ("batch", "seq", None))
+    positions = _positions(cfg, batch, B, S)
+    if "ln0" in params:
+        h = layers.apply_norm(cfg, params["ln0"], h)
+    emb0 = h
+
+    shared_p = params.get("shared")
+
+    want_cache = mode == "prefill"
+
+    def body(carry, xs):
+        h = carry
+        h = shard(h, ("batch", "seq", None))
+        caches, auxes = {}, []
+        for i, kind in enumerate(cfg.pattern):
+            h, cache, aux = _apply_block(cfg, kind, xs[f"pos{i}"], h,
+                                         positions, emb0, shard, moe_path,
+                                         moe_groups)
+            if cache is not None and want_cache:
+                caches[f"pos{i}"] = cache
+            if aux:
+                auxes.append(aux)
+        if cfg.shared_attn_every_period:
+            h, sc = _apply_shared(cfg, shared_p, h, emb0, positions)
+            if want_cache:
+                caches["shared"] = sc
+        aux_sum = ({k: sum(a[k] for a in auxes) for k in auxes[0]}
+                   if auxes else {})
+        return h, (caches, aux_sum)
+
+    body_fn = (jax.checkpoint(body)
+               if (remat and mode in ("train", "hidden")) else body)
+    h, (caches, aux) = jax.lax.scan(body_fn, h, params["blocks"],
+                                    unroll=scan_unroll)
+
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    if mode == "hidden":          # final hidden states (chunked-CE path)
+        aux_mean = jax.tree_util.tree_map(jnp.mean, aux)
+        return h, aux_mean
+    if mode == "train":
+        logits = _unembed(cfg, params, h).astype(jnp.float32)
+        aux_mean = jax.tree_util.tree_map(jnp.mean, aux)
+        return logits, aux_mean
+    # prefill: logits for the last position + populated decode state
+    logits = _unembed(cfg, params, h[:, -1]).astype(jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    state = {"caches": caches, "lengths": lengths}
+    return logits, state
+
+
+def _ce_from_logits(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - ll)
+
+
+def chunked_ce(cfg: ModelConfig, params, h, labels, *, chunks: int,
+               shard: Callable = _IDShard):
+    """Sequence-chunked cross-entropy: the (B, S, V) f32 logits are never
+    materialised — each S/chunks slice computes (and in backward, recomputes
+    under remat) its own logits. Chunking slices along S with dynamic_slice so
+    the batch sharding of ``h`` survives (reshape/transpose would break GSPMD
+    propagation and silently replicate the hidden states)."""
+    B, S, d = h.shape
+    csz = S // chunks
+
+    @jax.checkpoint
+    def one(ci):
+        hc = jax.lax.dynamic_slice_in_dim(h, ci * csz, csz, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, ci * csz, csz, axis=1)
+        hc = shard(hc, ("batch", None, None))
+        logits = _unembed(cfg, params, hc).astype(jnp.float32)
+        return _ce_from_logits(logits, lc)
+
+    def body(acc, ci):
+        return acc + one(ci), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(chunks))
+    return total / (B * S)
+
+
+def train_loss(cfg: ModelConfig, params, batch, *, shard: Callable = _IDShard,
+               remat: bool = True, moe_path: str = "dispatch",
+               scan_unroll: int = 1, loss_chunks: int = 0,
+               moe_groups: int = 0):
+    labels = batch["labels"]
+    S = labels.shape[1]
+    if loss_chunks == 0:                      # auto: chunk long sequences
+        loss_chunks = max(1, min(16, S // 512))
+    while S % loss_chunks:
+        loss_chunks -= 1
+    if loss_chunks > 1:
+        h, aux = forward(cfg, params, batch, mode="hidden", shard=shard,
+                         remat=remat, moe_path=moe_path,
+                         scan_unroll=scan_unroll, moe_groups=moe_groups)
+        ce = chunked_ce(cfg, params, h, labels, chunks=loss_chunks, shard=shard)
+    else:
+        logits, aux = forward(cfg, params, batch, mode="train", shard=shard,
+                              remat=remat, moe_path=moe_path,
+                              scan_unroll=scan_unroll, moe_groups=moe_groups)
+        ce = _ce_from_logits(logits, labels) / labels.size
+    loss = ce
+    if aux:
+        loss = loss + 0.01 * aux.get("moe_lb_loss", 0.0) \
+                    + 1e-3 * aux.get("moe_z_loss", 0.0)
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+# ------------------------------------------------------------------ decode
+
+def _cache_entry_spec(cfg: ModelConfig, kind: str, B: int, S: int, dtype):
+    sd = jax.ShapeDtypeStruct
+    if kind in ("attn", "attn_moe", "shared"):
+        return {"k": sd((B, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": sd((B, S, cfg.num_kv_heads, cfg.head_dim), dtype)}
+    if kind == "mamba2":
+        di, H, N, conv_ch, _ = mamba2._dims(cfg)
+        return {"conv": sd((B, cfg.ssm_conv - 1, conv_ch), dtype),
+                "ssd": sd((B, H, cfg.ssm_head_dim, N), jnp.float32)}
+    if kind == "rwkv6":
+        H, K = cfg.rwkv_heads, cfg.rwkv_head_size
+        return {"x_tm": sd((B, cfg.d_model), dtype),
+                "x_cm": sd((B, cfg.d_model), dtype),
+                "wkv": sd((B, H, K, K), jnp.float32)}
+    raise ValueError(kind)
+
+
+def decode_state_specs(cfg: ModelConfig, B: int, S: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    per = {f"pos{i}": _cache_entry_spec(cfg, kind, B, S, dtype)
+           for i, kind in enumerate(cfg.pattern)}
+    if cfg.shared_attn_every_period:
+        per["shared"] = _cache_entry_spec(cfg, "shared", B, S, dtype)
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_periods,) + s.shape, s.dtype), per)
+    return {"caches": stacked, "lengths": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def init_decode_state(cfg: ModelConfig, B: int, S: int, dtype=None):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  decode_state_specs(cfg, B, S, dtype))
+
+
+def _decode_block(cfg, kind, p, h, caches, key, layer, lengths, emb0, shard,
+                  moe_path, moe_groups=0, attn_dist=None):
+    """One block against the STACKED cache pytree (in-place updates)."""
+    cs = caches[key]
+    if kind in ("attn", "attn_moe"):
+        a, nk, nv = layers.attention_decode(
+            cfg, p["attn"], layers.apply_norm(cfg, p["ln1"], h),
+            cs["k"], cs["v"], layer, lengths, dist=attn_dist)
+        caches[key] = {"k": nk, "v": nv}
+        h = h + a
+        if kind == "attn":
+            h = h + layers.mlp_block(cfg, p["mlp"],
+                                     layers.apply_norm(cfg, p["ln2"], h))
+        else:
+            m, _ = moe.moe_block(cfg, p["moe"],
+                                 layers.apply_norm(cfg, p["ln2"], h),
+                                 path=moe_path, shard=shard,
+                                 groups=moe_groups)
+            h = h + m
+        return h, caches
+    pick = lambda x: jax.lax.dynamic_index_in_dim(x, layer, 0, keepdims=False)  # noqa: E731
+    put = lambda x, v: x.at[layer].set(v.astype(x.dtype))  # noqa: E731
+    if kind == "mamba2":
+        m, (conv_s, ssd_s) = mamba2.mamba2_decode(
+            cfg, p["mixer"], layers.apply_norm(cfg, p["ln1"], h),
+            (pick(cs["conv"]), pick(cs["ssd"])))
+        caches[key] = {"conv": put(cs["conv"], conv_s),
+                       "ssd": put(cs["ssd"], ssd_s)}
+        return h + m, caches
+    if kind == "rwkv6":
+        t, x_tm, wkv = rwkv6.timemix_decode(
+            cfg, p["tm"], layers.apply_norm(cfg, p["ln1"], h),
+            pick(cs["x_tm"]), pick(cs["wkv"]))
+        h = h + t
+        xn = layers.apply_norm(cfg, p["ln2"], h)
+        # channelmix's shift uses x_prev at t=0 == stored last token
+        c, x_cm = rwkv6.channelmix_block(cfg, p["cm"], xn, pick(cs["x_cm"]))
+        caches[key] = {"x_tm": put(cs["x_tm"], x_tm),
+                       "x_cm": put(cs["x_cm"], x_cm),
+                       "wkv": put(cs["wkv"], wkv)}
+        return h + c, caches
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params, state, batch, *,
+                shard: Callable = _IDShard, moe_path: str = "dispatch",
+                scan_unroll: int = 1, moe_groups: int = 0, attn_dist=None):
+    """One-token decode. batch: {"tokens": (B,1)} (or {"frames": (B,1,d)}).
+
+    The stacked caches travel in the scan CARRY and are updated IN PLACE
+    (scatter on the touched rows): per-layer traffic is one cache read plus
+    a B-row write — the cache is never rewritten. Returns (logits, state).
+    """
+    assert cfg.is_decoder, f"{cfg.name} is encoder-only"
+    dtype = jnp.dtype(cfg.dtype)
+    lengths = state["lengths"]
+    B = lengths.shape[0]
+    h = _embed(cfg, params, batch, dtype)
+    if "ln0" in params:
+        h = layers.apply_norm(cfg, params["ln0"], h)
+    h = shard(h, ("batch", None, None))
+    emb0 = h
+    shared_p = params.get("shared")
+
+    def body(carry, xs):
+        h, caches = carry
+        p, layer = xs
+        caches = dict(caches)
+        for i, kind in enumerate(cfg.pattern):
+            h, caches = _decode_block(cfg, kind, p[f"pos{i}"], h, caches,
+                                      f"pos{i}", layer, lengths, emb0, shard,
+                                      moe_path, moe_groups, attn_dist)
+        if cfg.shared_attn_every_period:
+            cat = jnp.concatenate([h, emb0], axis=-1)
+            a, nk, nv = layers.attention_decode(
+                cfg, shared_p["attn"],
+                layers.apply_norm(cfg, shared_p["ln1"], cat),
+                caches["shared"]["k"], caches["shared"]["v"], layer, lengths,
+                dist=attn_dist)
+            caches["shared"] = {"k": nk, "v": nv}
+            h = h + a
+            cat = jnp.concatenate([h, emb0], axis=-1)
+            h = h + layers.mlp_block(cfg, shared_p["mlp"],
+                                     layers.apply_norm(cfg, shared_p["ln2"], cat))
+        return (h, caches), None
+
+    (h, new_caches), _ = jax.lax.scan(
+        body, (h, dict(state["caches"])),
+        (params["blocks"], jnp.arange(cfg.num_periods)), unroll=scan_unroll)
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = _unembed(cfg, params, h[:, 0]).astype(jnp.float32)
+    return logits, {"caches": new_caches, "lengths": lengths + 1}

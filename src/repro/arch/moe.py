@@ -1,0 +1,156 @@
+"""Mixture-of-Experts MLP with top-k routing.
+
+Execution paths:
+  * ``dispatch`` (default) — capacity-bounded scatter/gather dispatch
+    (GShard-style dropping semantics, but built on scatter-add / gather so the
+    dispatch tensors are O(E*C*d), never O(T*E*C)). Under EP the expert dim is
+    sharded on the ``model`` mesh axis and the capacity dim on ``data``; XLA
+    emits the all-to-alls.
+  * ``dense`` — every expert computes every token (tiny smoke configs only;
+    used as a correctness cross-check for the dispatch path).
+
+Aux losses: Switch-style load-balance + router z-loss, returned as metrics.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    sp = {
+        "router": ParamSpec((d, E), ("embed", "expert"), "normal", 0.02),
+        "w_gate": ParamSpec((E, d, ff), ("expert", "embed", "expert_mlp")),
+        "w_up": ParamSpec((E, d, ff), ("expert", "embed", "expert_mlp")),
+        "w_down": ParamSpec((E, ff, d), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        sp["shared"] = {
+            "w_gate": ParamSpec((d, ff * cfg.n_shared_experts), ("embed", "mlp")),
+            "w_up": ParamSpec((d, ff * cfg.n_shared_experts), ("embed", "mlp")),
+            "w_down": ParamSpec((ff * cfg.n_shared_experts, d), ("mlp", "embed")),
+        }
+    return sp
+
+
+def _router(cfg, p, x):
+    """x (B,S,d) -> (weights (B,S,k), idx (B,S,k), aux dict)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    k = cfg.num_experts_per_tok
+    gates = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(gates, k)
+    w = w / jnp.sum(w, -1, keepdims=True)
+
+    E = cfg.num_experts
+    me = jnp.mean(gates, axis=(0, 1))                              # mean gate
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], E), axis=(0, 1))     # top-1 freq
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return w, idx, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}
+
+
+def _expert_ffn(p, x):
+    """x (E, C, d) -> (E, C, d), per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+
+def _shared_expert(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+def moe_block_dense(cfg: ModelConfig, p, x):
+    """All experts on all tokens (smoke-scale only)."""
+    w, idx, aux = _router(cfg, p, x)
+    E = cfg.num_experts
+    comb = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32)
+                   * w[..., None], axis=2)                          # (B,S,E)
+    g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("bsef,efd->bsed", h, p["w_down"].astype(x.dtype))
+    out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), comb).astype(x.dtype)
+    if cfg.n_shared_experts:
+        out = out + _shared_expert(p["shared"], x)
+    return out, aux
+
+
+def moe_block_dispatch(cfg: ModelConfig, p, x, *,
+                       capacity_factor: float = 1.25,
+                       shard: Callable = lambda t, names: t,
+                       groups: int = 0):
+    """GShard-style einsum dispatch with token groups.
+
+    Tokens are flattened to (G, S_g, d) with G sharded over the WHOLE mesh
+    (data x model), so each device routes only its local tokens; the dispatch
+    einsum against model-sharded experts lowers to all-to-alls. Capacity is
+    per (group, expert): C = cf * S_g * k / E; over-capacity choices drop
+    (token keeps its residual) — standard dropping semantics.
+
+    Memory: dispatch/combine tensors are (G, S_g, E, C) sharded on G.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    if groups <= 0:
+        groups = min(T, 256)
+    while T % groups:
+        groups -= 1
+    Sg = T // groups
+    C = max(4, -(-int(capacity_factor * Sg * k / E) // 4) * 4)
+    C = min(C, Sg * k)
+
+    w, idx, aux = _router(cfg, p, x)                    # (B,S,k) x2
+    xg = shard(x.reshape(groups, Sg, d), ("tokens", None, None))
+    wg = w.reshape(groups, Sg, k)
+    ig = idx.reshape(groups, Sg, k)
+
+    # slot of each (token, choice) within its (group, expert), FIFO by (s, k)
+    mask = jax.nn.one_hot(ig, E, dtype=jnp.int32)       # (G,Sg,k,E)
+    flat = mask.reshape(groups, Sg * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat               # exclusive rank
+    slot = jnp.sum(pos.reshape(groups, Sg, k, E) * mask, axis=-1)   # (G,Sg,k)
+    keep = (slot < C).astype(x.dtype)
+
+    slot_oh = jax.nn.one_hot(slot, C, dtype=x.dtype) * keep[..., None]
+    # dispatch (G,Sg,E,C) = sum_k onehot_e x onehot_c
+    disp = jnp.einsum("gske,gskc->gsec", mask.astype(x.dtype), slot_oh)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", mask.astype(x.dtype), slot_oh,
+                      wg.astype(x.dtype))
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", disp, xg)  # all-to-all here
+    expert_in = shard(expert_in, ("expert", "tokens", None, None))
+    eo = _expert_ffn_grouped(p, expert_in)              # (E,G,C,d)
+    eo = shard(eo, ("expert", "tokens", None, None))
+    yg = jnp.einsum("egcd,gsec->gsd", eo, comb)         # and back
+    out = shard(yg, ("tokens", None, None)).reshape(B, S, d)
+    if cfg.n_shared_experts:
+        out = out + _shared_expert(p["shared"], x)
+    return out, aux
+
+
+def _expert_ffn_grouped(p, x):
+    """x (E, G, C, d) -> (E, G, C, d), per-expert SwiGLU."""
+    g = jnp.einsum("egcd,edf->egcf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("egcd,edf->egcf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(x.dtype))
+
+
+def moe_block(cfg: ModelConfig, p, x, *, path: str = "dispatch",
+              shard: Callable = lambda t, names: t, groups: int = 0):
+    if path == "dense":
+        return moe_block_dense(cfg, p, x)
+    return moe_block_dispatch(cfg, p, x, shard=shard, groups=groups)

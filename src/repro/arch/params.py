@@ -1,0 +1,114 @@
+"""Parameter-spec machinery.
+
+Every model declares a pytree of :class:`ParamSpec` leaves. From that single
+declaration we derive:
+  * ``shape_structs``  — ShapeDtypeStruct pytree (dry-run, no allocation)
+  * ``init_tree``      — materialised parameters (smoke tests / examples)
+  * ``partition_tree`` — jax.sharding.PartitionSpec pytree via logical-axis rules
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis name per dim
+    init: str = "normal"                     # see _INITS
+    scale: Optional[float] = None            # stddev / fill override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(f, tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_spec)
+
+
+def stack_specs(tree, n: int, axis_name: str = "layers"):
+    """Prepend a leading stacked dim (for scan-over-periods)."""
+    return _tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        tree)
+
+
+def shape_structs(tree, dtype):
+    return _tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+
+
+def partition_tree(tree, rules: dict, mesh_axes: Tuple[str, ...]):
+    """Logical axes -> PartitionSpec. ``rules[name]`` is a mesh axis (or tuple
+    of mesh axes) or None. Unknown logical names replicate."""
+    def one(s: ParamSpec):
+        out = []
+        used: set = set()
+        for ax in s.axes:
+            m = rules.get(ax) if ax is not None else None
+            if m is None:
+                out.append(None)
+                continue
+            ms = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+            ms = tuple(a for a in ms if a in mesh_axes and a not in used)
+            used.update(ms)
+            out.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+        return P(*out)
+    return _tree_map(one, tree)
+
+
+def _init_leaf(spec: ParamSpec, key, dtype):
+    s = spec.shape
+    fan_in = s[-2] if len(s) >= 2 else max(s[-1], 1)
+    if spec.init == "normal":
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, s, jnp.float32) * std).astype(dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, s, jnp.float32) * std).astype(dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(s, dtype)
+    if spec.init == "ones":
+        return jnp.ones(s, dtype)
+    if spec.init == "const":
+        return jnp.full(s, spec.scale or 0.0, dtype)
+    if spec.init == "ssm_A":     # A_log: log Uniform[1, 16]
+        u = jax.random.uniform(key, s, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt":    # softplus^-1 of Uniform[1e-3, 1e-1]
+        u = jax.random.uniform(key, s, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    if spec.init == "rwkv_decay":  # w0 so that exp(-exp(w0)) ~ 0.85..0.99
+        u = jax.random.uniform(key, s, jnp.float32, -3.0, -0.5)
+        return u.astype(dtype)
+    if spec.init == "uniform_small":
+        return (jax.random.uniform(key, s, jnp.float32, -0.5, 0.5)
+                * (spec.scale or 1.0)).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_tree(tree, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def cast_tree(params, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

@@ -1,0 +1,145 @@
+"""RWKV-6 (Finch) block: time-mix (WKV scan with data-dependent decay) +
+channel-mix, both with token-shift. LayerNorms are handled by the caller
+(model.py) like every other block; this module provides the two mixers.
+
+Decode state per layer: (x_prev_tm (B,d), x_prev_cm (B,d), wkv (B,H,K,K)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.rwkv6_scan.ops import wkv6_scan
+from ..kernels.rwkv6_scan.ref import wkv6_decode_step
+from .params import ParamSpec
+
+_DDLERP_R = 32      # low-rank dim of the data-dependent token-shift lerp
+_DECAY_R = 64       # low-rank dim of the decay projection
+
+
+def timemix_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_size
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), "uniform_small", 1.0),
+        "mu_5": ParamSpec((5, d), (None, "embed"), "uniform_small", 1.0),
+        "lora_A": ParamSpec((d, 5 * _DDLERP_R), ("embed", None), "normal", 0.01),
+        "lora_B": ParamSpec((5, _DDLERP_R, d), (None, None, "embed"), "normal", 0.01),
+        "w0": ParamSpec((d,), ("embed",), "rwkv_decay"),
+        "w_lora_A": ParamSpec((d, _DECAY_R), ("embed", None), "normal", 0.01),
+        "w_lora_B": ParamSpec((_DECAY_R, d), (None, "embed"), "normal", 0.01),
+        "u": ParamSpec((H, K), ("rwkv_heads", None), "uniform_small", 1.0),
+        "wr": ParamSpec((d, d), ("embed", "rwkv_hidden")),
+        "wk": ParamSpec((d, d), ("embed", "rwkv_hidden")),
+        "wv": ParamSpec((d, d), ("embed", "rwkv_hidden")),
+        "wg": ParamSpec((d, d), ("embed", "rwkv_hidden")),
+        "wo": ParamSpec((d, d), ("rwkv_hidden", "embed")),
+        "ln_x_scale": ParamSpec((d,), ("embed",), "ones"),
+        "ln_x_bias": ParamSpec((d,), ("embed",), "zeros"),
+    }
+
+
+def channelmix_specs(cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), "uniform_small", 1.0),
+        "mu_r": ParamSpec((d,), ("embed",), "uniform_small", 1.0),
+        "wk": ParamSpec((d, ff), ("embed", "mlp")),
+        "wv": ParamSpec((ff, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", "rwkv_hidden")),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: x[t-1] with x_prev filling t=0. x: (B,S,d), x_prev: (B,d)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _group_norm(scale, bias, x, H, eps=1e-5):
+    """Per-head LayerNorm over each head's channels. x: (B,S,d)."""
+    B, S, d = x.shape
+    xf = x.astype(jnp.float32).reshape(B, S, H, d // H)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(B, S, d)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ddlerp(p, x, dx):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    s = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["lora_A"].astype(x.dtype))
+                 .astype(jnp.float32)).astype(x.dtype)
+    B, S, _ = x.shape
+    s = s.reshape(B, S, 5, _DDLERP_R)
+    off = jnp.einsum("bsfr,frd->bsfd", s, p["lora_B"].astype(x.dtype))
+    mixed = (x[:, :, None] + dx[:, :, None]
+             * (p["mu_5"].astype(x.dtype)[None, None] + off))
+    return [mixed[:, :, i] for i in range(5)]     # w,k,v,r,g
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay w in (0,1)."""
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w_lora_A"].astype(xw.dtype))
+                  .astype(jnp.float32))
+    ww = (p["w0"].astype(jnp.float32)
+          + jnp.einsum("bsr,rd->bsd", lo, p["w_lora_B"].astype(jnp.float32)))
+    return jnp.exp(-jnp.exp(ww))                   # (B,S,d) f32
+
+
+def timemix_block(cfg: ModelConfig, p, x, x_prev, wkv_state=None, *, chunk: int = 32):
+    """x: (B,S,d) normed input. Returns (out, last_x (B,d), new_wkv_state)."""
+    B, S, d = x.shape
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_size
+    dx = _shift(x, x_prev) - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, dx)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype))
+                    .astype(jnp.float32)).astype(x.dtype)
+    w = _decay(p, xw)
+
+    hshape = (B, S, H, K)
+    y, new_state = wkv6_scan(r.reshape(hshape), k.reshape(hshape),
+                             v.reshape(hshape), w.reshape(hshape),
+                             p["u"].astype(jnp.float32),
+                             wkv_state, chunk=chunk)
+    y = _group_norm(p["ln_x_scale"], p["ln_x_bias"], y.reshape(B, S, d), H)
+    out = jnp.einsum("bsd,de->bse", y * g, p["wo"].astype(x.dtype))
+    return out, x[:, -1], new_state
+
+
+def timemix_decode(cfg: ModelConfig, p, x, x_prev, wkv_state):
+    """One token: x (B,1,d). Returns (out (B,1,d), last_x, new_state)."""
+    B, _, d = x.shape
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_size
+    dx = x_prev[:, None] - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, dx)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype))
+                    .astype(jnp.float32)).astype(x.dtype)
+    w = _decay(p, xw)
+    y, new_state = wkv6_decode_step(
+        wkv_state, r[:, 0].reshape(B, H, K), k[:, 0].reshape(B, H, K),
+        v[:, 0].reshape(B, H, K), w[:, 0].reshape(B, H, K),
+        p["u"].astype(jnp.float32))
+    y = _group_norm(p["ln_x_scale"], p["ln_x_bias"], y.reshape(B, 1, d), H)
+    out = jnp.einsum("bsd,de->bse", y * g, p["wo"].astype(x.dtype))
+    return out, x[:, 0], new_state
+
+
+def channelmix_block(cfg: ModelConfig, p, x, x_prev):
+    """x: (B,S,d) normed input. Returns (out, last_x (B,d))."""
+    dx = _shift(x, x_prev) - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jnp.maximum(k.astype(jnp.float32), 0.0)).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(x.dtype))
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+                           .astype(jnp.float32)).astype(x.dtype)
+    return rgate * kv, x[:, -1]

@@ -1,0 +1,101 @@
+"""The Castor system facade: wires the knowledge store, registry, deployments,
+scheduler, executors and lineage into the paper's workflow (Fig. 1):
+
+    (1) ingest -> (2) semantics -> (3/4) implement+publish -> (5/6) deploy ->
+    (7) schedule -> (8/9) execute -> (10) persist forecasts.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from ..timeseries.store import TimeSeriesStore
+from ..timeseries.weather import WeatherService
+from .deployment import DeploymentStore, ModelDeployment, deploy_for_all
+from .executor import FleetExecutor, JobResult, LocalPoolExecutor
+from .lineage import ModelVersionStore, PredictionStore
+from .registry import ModelRegistry
+from .scheduler import ModelScheduler, Schedule
+from .semantics import Context, Entity, SemanticGraph, Signal
+
+
+class Castor:
+    def __init__(self, *, weather_seed: int = 7):
+        self.store = TimeSeriesStore()
+        self.graph = SemanticGraph()
+        self.registry = ModelRegistry()
+        self.deployments = DeploymentStore()
+        self.versions = ModelVersionStore()
+        self.predictions = PredictionStore()
+        self.weather = WeatherService(seed=weather_seed)
+        self.scheduler = ModelScheduler(self.deployments, self.registry)
+
+    # ---------------- (1)/(2) data + semantics ----------------
+    def ingest(self, ts_id: str, times, values) -> int:
+        return self.store.append(ts_id, times, values)
+
+    def add_signal(self, name: str, unit: str = "", description: str = "") -> Signal:
+        return self.graph.add_signal(Signal(name, unit, description))
+
+    def add_entity(self, name: str, kind: str = "ENTITY", lat: float = 0.0,
+                   lon: float = 0.0, parent: Optional[str] = None) -> Entity:
+        return self.graph.add_entity(Entity(name, kind, lat, lon), parent)
+
+    def link(self, ts_id: str, signal: str, entity: str) -> Context:
+        return self.graph.link_timeseries(ts_id, signal, entity)
+
+    # ---------------- (3)/(4) implementations ----------------
+    def publish(self, package: str, version: str, cls):
+        return self.registry.register(package, version, cls)
+
+    # ---------------- (5)/(6) deployments ----------------
+    def deploy(self, dep: ModelDeployment) -> ModelDeployment:
+        return self.deployments.register(dep)
+
+    def deploy_for_all(self, **kw) -> List[ModelDeployment]:
+        return deploy_for_all(self.graph, self.deployments, **kw)
+
+    # ---------------- (7)-(10) execution ----------------
+    def tick(self, now: float, *, executor: str = "fleet",
+             max_parallel: int = 16) -> List[JobResult]:
+        """One scheduler cycle: poll due jobs, execute, persist."""
+        jobs = self.scheduler.poll(now)
+        if not jobs:
+            return []
+        if executor == "fleet":
+            ex = FleetExecutor(self, fallback=LocalPoolExecutor(
+                self, max_parallel=max_parallel))
+        else:
+            ex = LocalPoolExecutor(self, max_parallel=max_parallel)
+        return ex.run(jobs)
+
+    def run_until(self, t0: float, t1: float, step: float,
+                  executor: str = "fleet") -> List[JobResult]:
+        out = []
+        t = t0
+        while t <= t1:
+            out.extend(self.tick(t, executor=executor))
+            t += step
+        return out
+
+    # ---------------- retrieval (semantic APIs) ----------------
+    def read(self, signal: str, entity: str, start=None, end=None):
+        ctx = self.graph.context(signal, entity)
+        return self.store.read(ctx.ts_id, start, end)
+
+    def best_forecast(self, signal: str, entity: str, at: Optional[float] = None):
+        return self.predictions.latest(signal, entity, at)
+
+    def stats(self) -> dict:
+        return {**self.graph.stats(),
+                "points": self.store.total_points(),
+                "deployments": len(self.deployments),
+                "model_versions": self.versions.count(),
+                "forecasts": self.predictions.count()}
+
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+WEEK = 7 * DAY
+__all__ = ["Castor", "Schedule", "ModelDeployment", "HOUR", "DAY", "WEEK"]

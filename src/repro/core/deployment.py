@@ -1,0 +1,88 @@
+"""Model deployments (paper §3.2, Listing 2) + programmatic fleet deployment.
+
+A deployment binds (implementation, semantic context, schedules, user params,
+rank). ``deploy_for_all`` implements the paper's key scaling feature:
+explore the semantic graph and deploy an implementation to every matching
+context, so the application grows as sensors are added.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from .scheduler import Schedule
+
+
+@dataclass
+class ModelDeployment:
+    name: str                       # unique deployment name
+    package: str                    # implementation reference
+    model_class: str = ""           # informational (class name)
+    version: Optional[str] = None   # None = latest at execution time
+    signal: str = ""
+    entity: str = ""
+    train: Optional[Schedule] = None
+    score: Optional[Schedule] = None
+    user_params: Dict = field(default_factory=dict)
+    rank: int = 0                   # paper's model-ranking mechanism (0 = best)
+
+    def to_json(self) -> str:
+        d = asdict(self)
+        return json.dumps(d, indent=2, default=str)
+
+    @property
+    def context_key(self):
+        return (self.signal, self.entity)
+
+
+class DeploymentStore:
+    def __init__(self):
+        self._deps: Dict[str, ModelDeployment] = {}
+
+    def register(self, dep: ModelDeployment) -> ModelDeployment:
+        if dep.name in self._deps:
+            raise ValueError(f"deployment {dep.name} already registered")
+        self._deps[dep.name] = dep
+        return dep
+
+    def remove(self, name: str):
+        self._deps.pop(name, None)
+
+    def get(self, name: str) -> ModelDeployment:
+        return self._deps[name]
+
+    def all(self) -> List[ModelDeployment]:
+        return sorted(self._deps.values(), key=lambda d: d.name)
+
+    def for_context(self, signal: str, entity: str) -> List[ModelDeployment]:
+        """All models deployed against one context, rank-sorted (Fig. 5)."""
+        out = [d for d in self._deps.values()
+               if d.signal == signal and d.entity == entity]
+        return sorted(out, key=lambda d: (d.rank, d.name))
+
+    def __len__(self):
+        return len(self._deps)
+
+
+def deploy_for_all(graph, deployments: DeploymentStore, *, package: str,
+                   signal: str, name_prefix: str,
+                   train: Optional[Schedule] = None,
+                   score: Optional[Schedule] = None,
+                   user_params: Optional[dict] = None,
+                   version: Optional[str] = None,
+                   kind: Optional[str] = None,
+                   under: Optional[str] = None,
+                   rank: int = 0) -> List[ModelDeployment]:
+    """Programmatic deployment from a semantic rule (paper §3.2):
+    one deployment per entity that carries ``signal`` (optionally filtered by
+    entity kind / topology)."""
+    out = []
+    for ent in graph.find_entities(kind=kind, has_signal=signal, under=under):
+        dep = ModelDeployment(
+            name=f"{name_prefix}-{ent.name}",
+            package=package, version=version, signal=signal, entity=ent.name,
+            train=train, score=score, user_params=dict(user_params or {}),
+            rank=rank)
+        out.append(deployments.register(dep))
+    return out

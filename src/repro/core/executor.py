@@ -1,0 +1,220 @@
+"""Model execution engines (paper §2 + §4.3, adapted per DESIGN.md §2).
+
+Two interchangeable executors:
+
+* ``LocalPoolExecutor`` — paper-faithful serverless semantics: each job is an
+  independent unit on a bounded worker pool (the paper's 10..200 parallel
+  containers), with retries, job timeout, and MapReduce-style speculative
+  re-dispatch of stragglers. This is what the Table-3 scalability benchmark
+  sweeps.
+
+* ``FleetExecutor`` — the TPU-native adaptation: due jobs are binned by
+  (implementation, version, task, params) and each bin executes as ONE
+  megabatched computation via the implementation's ``fleet_train`` /
+  ``fleet_score`` hooks (vmapped JAX under the hood). Implementations without
+  fleet hooks fall back to the pool.
+
+Both return per-job ``JobResult``s and persist model versions / predictions
+identically, so the two paths are observationally equivalent up to speed.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .lineage import Forecast
+from .registry import ModelInterface
+from .scheduler import Job, bin_jobs
+
+
+@dataclass
+class JobResult:
+    job: Job
+    ok: bool
+    duration_s: float
+    attempts: int = 1
+    error: str = ""
+    output: Any = None
+    speculative_win: bool = False   # a backup copy finished first
+
+
+class _ExecBase:
+    def __init__(self, system):
+        self.system = system
+
+    # ------------- single-job execution (shared) -------------
+    def _instantiate(self, job: Job) -> ModelInterface:
+        cls = self.system.registry.get(job.package, job.version)
+        ctx = self.system.graph.context(job.signal, job.entity)
+        dep = self.system.deployments.get(job.deployment_name)
+        latest = self.system.versions.get(job.deployment_name)
+        up = dict(dep.user_params)
+        up.setdefault("now", job.scheduled_at)   # execution-time parameter
+        return cls(context=ctx, task=job.task, model_id=job.deployment_name,
+                   model_version=latest.version if latest else None,
+                   user_params=up, system=self.system)
+
+    def _run_one(self, job: Job) -> Any:
+        inst = self._instantiate(job)
+        if job.task == "train":
+            t0 = time.perf_counter()
+            model_obj = inst.train()
+            dt = time.perf_counter() - t0
+            self.system.versions.save(
+                job.deployment_name, model_obj, trained_at=job.scheduled_at,
+                metadata={"train_seconds": dt, "signal": job.signal,
+                          "entity": job.entity, "package": str(job.package)})
+            return {"trained": True}
+        # score
+        latest = self.system.versions.get(job.deployment_name)
+        if latest is None:
+            raise RuntimeError(f"no trained version for {job.deployment_name}")
+        times, values = inst.score(latest.params)
+        dep = self.system.deployments.get(job.deployment_name)
+        self.system.predictions.save(Forecast(
+            deployment_name=job.deployment_name, signal=job.signal,
+            entity=job.entity, created_at=job.scheduled_at,
+            times=np.asarray(times), values=np.asarray(values),
+            model_version=latest.version, rank=dep.rank))
+        return {"scored": True, "points": len(times)}
+
+
+class LocalPoolExecutor(_ExecBase):
+    """Paper-faithful parallel job execution on a bounded pool."""
+
+    def __init__(self, system, *, max_parallel: int = 16, max_retries: int = 2,
+                 straggler_factor: float = 3.0, straggler_min_s: float = 0.5,
+                 speculative: bool = True):
+        super().__init__(system)
+        self.max_parallel = max_parallel
+        self.max_retries = max_retries
+        self.straggler_factor = straggler_factor
+        self.straggler_min_s = straggler_min_s
+        self.speculative = speculative
+
+    def run(self, jobs: List[Job]) -> List[JobResult]:
+        """Dependency phases: all due TRAIN jobs complete before SCORE jobs
+        start (a scoring job may consume the version trained this cycle)."""
+        trains = [j for j in jobs if j.task == "train"]
+        scores = [j for j in jobs if j.task != "train"]
+        out: List[JobResult] = []
+        for phase in (trains, scores):
+            out.extend(self._run_phase(phase))
+        return out
+
+    def _run_phase(self, jobs: List[Job]) -> List[JobResult]:
+        if not jobs:
+            return []
+        results: Dict[int, JobResult] = {}
+        durations: List[float] = []
+
+        def attempt(job: Job, idx: int, n: int) -> JobResult:
+            t0 = time.perf_counter()
+            try:
+                out = self._run_one(job)
+                return JobResult(job, True, time.perf_counter() - t0,
+                                 attempts=n, output=out)
+            except Exception as e:  # noqa: BLE001
+                return JobResult(job, False, time.perf_counter() - t0,
+                                 attempts=n, error=f"{type(e).__name__}: {e}")
+
+        with ThreadPoolExecutor(max_workers=self.max_parallel) as pool:
+            pending: Dict[Future, Tuple[Job, int, int, float]] = {}
+            backups: Dict[int, Future] = {}
+            for i, job in enumerate(jobs):
+                f = pool.submit(attempt, job, i, 1)
+                pending[f] = (job, i, 1, time.perf_counter())
+
+            while pending:
+                done, _ = wait(list(pending), timeout=self.straggler_min_s,
+                               return_when=FIRST_COMPLETED)
+                now = time.perf_counter()
+                for f in done:
+                    job, idx, n, t0 = pending.pop(f)
+                    res = f.result()
+                    if idx in results:      # a copy already finished
+                        continue
+                    if res.ok:
+                        results[idx] = res
+                        durations.append(res.duration_s)
+                        if idx in backups and backups[idx] is not f:
+                            res.speculative_win = n > 1
+                    elif n <= self.max_retries:
+                        nf = pool.submit(attempt, job, idx, n + 1)
+                        pending[nf] = (job, idx, n + 1, now)
+                    else:
+                        results[idx] = res
+                        self.system.scheduler.mark_failed(job)
+                # speculative re-dispatch of stragglers (MapReduce-style)
+                if self.speculative and durations:
+                    med = float(np.median(durations))
+                    thresh = max(self.straggler_min_s, self.straggler_factor * med)
+                    for f, (job, idx, n, t0) in list(pending.items()):
+                        if idx not in backups and now - t0 > thresh:
+                            bf = pool.submit(attempt, job, idx, n + 1)
+                            backups[idx] = bf
+                            pending[bf] = (job, idx, n + 1, now)
+        return [results[i] for i in sorted(results)]
+
+
+class FleetExecutor(_ExecBase):
+    """TPU-native megabatched execution: one computation per job bin."""
+
+    def __init__(self, system, *, fallback: Optional[LocalPoolExecutor] = None):
+        super().__init__(system)
+        self.fallback = fallback or LocalPoolExecutor(system, max_parallel=8)
+        self.last_bin_stats: List[dict] = []
+
+    def run(self, jobs: List[Job]) -> List[JobResult]:
+        out: List[JobResult] = []
+        self.last_bin_stats = []
+        for key, bin_jobs_ in bin_jobs(jobs).items():
+            cls = self.system.registry.get(key[0], key[1])
+            if not getattr(cls, "SUPPORTS_FLEET", False):
+                out.extend(self.fallback.run(bin_jobs_))
+                continue
+            t0 = time.perf_counter()
+            instances = [self._instantiate(j) for j in bin_jobs_]
+            try:
+                if key[2] == "train":
+                    model_objs = cls.fleet_train(instances)
+                    for j, mo in zip(bin_jobs_, model_objs):
+                        self.system.versions.save(
+                            j.deployment_name, mo, trained_at=j.scheduled_at,
+                            metadata={"fleet": True, "signal": j.signal,
+                                      "entity": j.entity})
+                else:
+                    latests = [self.system.versions.get(j.deployment_name)
+                               for j in bin_jobs_]
+                    missing = [j.deployment_name for j, l in
+                               zip(bin_jobs_, latests) if l is None]
+                    if missing:
+                        raise RuntimeError(f"no trained version for {missing[:3]}")
+                    preds = cls.fleet_score(instances,
+                                            [l.params for l in latests])
+                    for j, l, (times, values) in zip(bin_jobs_, latests, preds):
+                        dep = self.system.deployments.get(j.deployment_name)
+                        self.system.predictions.save(Forecast(
+                            deployment_name=j.deployment_name, signal=j.signal,
+                            entity=j.entity, created_at=j.scheduled_at,
+                            times=np.asarray(times), values=np.asarray(values),
+                            model_version=l.version, rank=dep.rank))
+                dt = time.perf_counter() - t0
+                per = dt / max(len(bin_jobs_), 1)
+                out.extend(JobResult(j, True, per) for j in bin_jobs_)
+                self.last_bin_stats.append(
+                    {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt})
+            except Exception as e:  # noqa: BLE001
+                dt = time.perf_counter() - t0
+                err = f"{type(e).__name__}: {e}"
+                for j in bin_jobs_:
+                    out.append(JobResult(j, False, dt / len(bin_jobs_), error=err))
+                    self.system.scheduler.mark_failed(j)
+        return out

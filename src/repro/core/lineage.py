@@ -1,0 +1,131 @@
+"""Model-version + prediction lineage (paper §2, Figs. 5-7).
+
+Every trained model version is persisted with metadata; every rolling-horizon
+forecast is appended and NEVER overwritten, so historical performance can be
+validated across prediction horizons (Fig. 7). The ranking mechanism serves
+"the best" prediction per context to downstream consumers that only know the
+semantic context.
+"""
+from __future__ import annotations
+
+import threading
+import time as _time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelVersion:
+    model_id: str                 # deployment name
+    version: int                  # monotonically increasing per model_id
+    trained_at: float             # simulation clock
+    params: Any                   # fitted parameters (pytree of arrays)
+    metadata: Dict = field(default_factory=dict)   # train duration, window, ...
+
+
+class ModelVersionStore:
+    """Idempotent on (model_id, trained_at): duplicate executions of one
+    scheduled training job yield one version."""
+
+    def __init__(self):
+        self._versions: Dict[str, List[ModelVersion]] = {}
+        self._lock = threading.Lock()
+
+    def save(self, model_id: str, params, trained_at: float,
+             metadata: Optional[dict] = None) -> ModelVersion:
+        with self._lock:
+            hist = self._versions.setdefault(model_id, [])
+            for mv in hist:
+                if mv.trained_at == trained_at:      # duplicate execution
+                    return mv
+            mv = ModelVersion(model_id, len(hist) + 1, trained_at, params,
+                              dict(metadata or {}))
+            hist.append(mv)
+            return mv
+
+    def get(self, model_id: str, version: Optional[int] = None) -> Optional[ModelVersion]:
+        hist = self._versions.get(model_id)
+        if not hist:
+            return None
+        if version is None:
+            return hist[-1]
+        return hist[version - 1]
+
+    def history(self, model_id: str) -> List[ModelVersion]:
+        return list(self._versions.get(model_id, ()))
+
+    def count(self) -> int:
+        return sum(len(v) for v in self._versions.values())
+
+
+@dataclass(frozen=True)
+class Forecast:
+    deployment_name: str
+    signal: str
+    entity: str
+    created_at: float             # when the scoring job ran
+    times: np.ndarray             # horizon timestamps
+    values: np.ndarray
+    model_version: int
+    rank: int = 0
+
+
+class PredictionStore:
+    """Append-only rolling-horizon forecast store.
+
+    Saves are IDEMPOTENT on (deployment, created_at): retried or speculative
+    duplicate executions of the same scheduled scoring job persist once —
+    rolling horizons at different created_at are all kept (never overwritten).
+    """
+
+    def __init__(self):
+        self._by_dep: Dict[str, List[Forecast]] = {}
+        self._by_ctx: Dict[Tuple[str, str], List[Forecast]] = {}
+        self._seen: set = set()
+        self._lock = threading.Lock()
+
+    def save(self, fc: Forecast) -> Forecast:
+        key = (fc.deployment_name, float(fc.created_at))
+        with self._lock:
+            if key in self._seen:                    # duplicate execution
+                return fc
+            self._seen.add(key)
+            self._by_dep.setdefault(fc.deployment_name, []).append(fc)
+            self._by_ctx.setdefault((fc.signal, fc.entity), []).append(fc)
+        return fc
+
+    def history(self, deployment_name: str) -> List[Forecast]:
+        """Full lineage — every rolling-horizon forecast ever produced."""
+        return list(self._by_dep.get(deployment_name, ()))
+
+    def for_context(self, signal: str, entity: str) -> List[Forecast]:
+        return list(self._by_ctx.get((signal, entity), ()))
+
+    def latest(self, signal: str, entity: str,
+               at: Optional[float] = None) -> Optional[Forecast]:
+        """Best-ranked most-recent forecast for a context (ranking mechanism):
+        downstream apps retrieve by semantics only, without knowing which
+        model produced the prediction."""
+        cand = [f for f in self.for_context(signal, entity)
+                if at is None or f.created_at <= at]
+        if not cand:
+            return None
+        newest = max(f.created_at for f in cand)
+        newest_set = [f for f in cand if f.created_at == newest]
+        return min(newest_set, key=lambda f: (f.rank, f.deployment_name))
+
+    def horizons(self, deployment_name: str, target_time: float,
+                 tol: float = 1.0) -> List[Tuple[float, float]]:
+        """All (created_at, predicted_value) pairs for one target timestamp —
+        the Fig. 7 multi-horizon validation view."""
+        out = []
+        for fc in self.history(deployment_name):
+            hit = np.where(np.abs(fc.times - target_time) <= tol)[0]
+            if hit.size:
+                out.append((fc.created_at, float(fc.values[hit[0]])))
+        return sorted(out)
+
+    def count(self) -> int:
+        return sum(len(v) for v in self._by_dep.values())

@@ -1,0 +1,91 @@
+"""Model scheduling (paper §2 step (7)): periodically load registered
+deployments, decide which are due for training/scoring, and emit jobs.
+
+Jobs carry a *bin key* so the fleet executor can megabatch identical
+(implementation, task) work — the TPU-native analogue of launching
+thousands of serverless containers (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Start time + repeat interval, both in epoch seconds."""
+    start: float
+    every: float
+
+    def occurrences_due(self, last_run: Optional[float], now: float) -> int:
+        """How many firings are due in (last_run, now]."""
+        if now < self.start:
+            return 0
+        k_now = int((now - self.start) // self.every)       # latest index due
+        if last_run is None:
+            return 1                                        # fire once, catch up
+        if last_run < self.start:
+            return k_now + 1
+        k_last = int((last_run - self.start) // self.every)
+        return max(0, k_now - k_last)
+
+
+@dataclass(frozen=True)
+class Job:
+    deployment_name: str
+    package: str
+    version: str                    # RESOLVED version (registry pinned at poll)
+    task: str                       # "train" | "score"
+    scheduled_at: float
+    signal: str
+    entity: str
+    user_params_key: str = ""       # part of the bin key (same config batches)
+
+    @property
+    def bin_key(self) -> Tuple[str, str, str, str]:
+        return (self.package, self.version, self.task, self.user_params_key)
+
+
+class ModelScheduler:
+    """Tracks last-run state per (deployment, task) and emits due jobs."""
+
+    def __init__(self, deployments, registry):
+        self.deployments = deployments
+        self.registry = registry
+        self._last: Dict[Tuple[str, str], float] = {}
+
+    def poll(self, now: float) -> List[Job]:
+        jobs: List[Job] = []
+        for dep in self.deployments.all():
+            for task in ("train", "score"):
+                sched: Optional[Schedule] = getattr(dep, task)
+                if sched is None:
+                    continue
+                due = sched.occurrences_due(self._last.get((dep.name, task)), now)
+                if due <= 0:
+                    continue
+                version = self.registry.resolve_version(dep.package, dep.version)
+                jobs.append(Job(
+                    deployment_name=dep.name, package=dep.package,
+                    version=version, task=task, scheduled_at=now,
+                    signal=dep.signal, entity=dep.entity,
+                    user_params_key=_params_key(dep.user_params)))
+                self._last[(dep.name, task)] = now
+        # deterministic order: training before scoring, then by name
+        jobs.sort(key=lambda j: (j.task != "train", j.deployment_name))
+        return jobs
+
+    def mark_failed(self, job: Job):
+        """Failed jobs re-fire on the next poll (at-least-once semantics)."""
+        self._last.pop((job.deployment_name, job.task), None)
+
+
+def _params_key(params: dict) -> str:
+    return repr(sorted(params.items()))
+
+
+def bin_jobs(jobs: List[Job]) -> Dict[Tuple, List[Job]]:
+    bins: Dict[Tuple, List[Job]] = {}
+    for j in jobs:
+        bins.setdefault(j.bin_key, []).append(j)
+    return bins

@@ -1,0 +1,126 @@
+"""Knowledge-based representation of IoT data (paper §2, §4.1, Fig. 3).
+
+Every time-series is a node connected to a ``Signal`` concept (what physical
+quantity) and an ``Entity`` concept (where / what thing); entity topology
+(prosumer -> feeder -> substation) is an edge set. Model code expresses
+feature engineering against these concepts, which is what enables
+programmatic fleet deployment ("deploy this forecaster to every entity with
+an ENERGY_LOAD signal").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+
+@dataclass(frozen=True)
+class Signal:
+    name: str                      # e.g. ENERGY_LOAD
+    unit: str = ""                 # e.g. kWh
+    description: str = ""
+
+
+@dataclass(frozen=True)
+class Entity:
+    name: str                      # e.g. SUBSTATION_S1
+    kind: str = "ENTITY"           # SUBSTATION | FEEDER | PROSUMER | ...
+    lat: float = 0.0
+    lon: float = 0.0
+
+
+@dataclass(frozen=True)
+class Context:
+    """A semantic context = (signal, entity) + its time-series node."""
+    signal: Signal
+    entity: Entity
+    ts_id: str
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.signal.name, self.entity.name)
+
+
+class SemanticGraph:
+    def __init__(self):
+        self.signals: Dict[str, Signal] = {}
+        self.entities: Dict[str, Entity] = {}
+        self._edges: Dict[str, Set[str]] = {}          # parent -> children
+        self._parents: Dict[str, str] = {}             # child -> parent
+        self._ts: Dict[Tuple[str, str], str] = {}      # (signal, entity) -> ts_id
+        self._ts_rev: Dict[str, Tuple[str, str]] = {}
+
+    # ---------------- concept definition ----------------
+    def add_signal(self, sig: Signal) -> Signal:
+        self.signals[sig.name] = sig
+        return sig
+
+    def add_entity(self, ent: Entity, parent: Optional[str] = None) -> Entity:
+        self.entities[ent.name] = ent
+        if parent is not None:
+            assert parent in self.entities, f"unknown parent {parent}"
+            self._edges.setdefault(parent, set()).add(ent.name)
+            self._parents[ent.name] = parent
+        return ent
+
+    def link_timeseries(self, ts_id: str, signal: str, entity: str) -> Context:
+        """Attach semantics to an ingested series (paper step (2))."""
+        assert signal in self.signals, f"unknown signal {signal}"
+        assert entity in self.entities, f"unknown entity {entity}"
+        self._ts[(signal, entity)] = ts_id
+        self._ts_rev[ts_id] = (signal, entity)
+        return self.context(signal, entity)
+
+    # ---------------- queries (semantic reasoning) ----------------
+    def context(self, signal: str, entity: str) -> Context:
+        ts_id = self._ts.get((signal, entity))
+        if ts_id is None:
+            # contexts may exist before data arrives (predictions attach here)
+            ts_id = f"ts::{signal}::{entity}"
+            self._ts[(signal, entity)] = ts_id
+            self._ts_rev[ts_id] = (signal, entity)
+        return Context(self.signals[signal], self.entities[entity], ts_id)
+
+    def has_series(self, signal: str, entity: str) -> bool:
+        return (signal, entity) in self._ts
+
+    def children(self, entity: str) -> List[Entity]:
+        return [self.entities[c] for c in sorted(self._edges.get(entity, ()))]
+
+    def parent(self, entity: str) -> Optional[Entity]:
+        p = self._parents.get(entity)
+        return self.entities[p] if p else None
+
+    def descendants(self, entity: str) -> List[Entity]:
+        out, stack = [], [entity]
+        while stack:
+            for c in sorted(self._edges.get(stack.pop(), ())):
+                out.append(self.entities[c])
+                stack.append(c)
+        return out
+
+    def find_entities(self, kind: Optional[str] = None,
+                      has_signal: Optional[str] = None,
+                      under: Optional[str] = None) -> List[Entity]:
+        """The fleet-deployment query: all entities matching semantic rules."""
+        cand: Iterable[Entity] = self.entities.values()
+        if under is not None:
+            cand = self.descendants(under)
+        out = []
+        for e in cand:
+            if kind is not None and e.kind != kind:
+                continue
+            if has_signal is not None and (has_signal, e.name) not in self._ts:
+                continue
+            out.append(e)
+        return sorted(out, key=lambda e: e.name)
+
+    def contexts_for_signal(self, signal: str) -> List[Context]:
+        return [self.context(s, e) for (s, e) in sorted(self._ts) if s == signal]
+
+    def signal_of(self, ts_id: str) -> Optional[str]:
+        pair = self._ts_rev.get(ts_id)
+        return pair[0] if pair else None
+
+    def stats(self) -> dict:
+        return {"signals": len(self.signals), "entities": len(self.entities),
+                "timeseries": len(self._ts), "edges": sum(map(len, self._edges.values()))}

@@ -1,0 +1,2 @@
+from .synthetic import (synthetic_lm_batch, synthetic_batch_for,  # noqa: F401
+                        input_specs_for, SyntheticTokenStream)

@@ -1,0 +1,94 @@
+"""Deterministic synthetic token/frame streams + ShapeDtypeStruct input specs.
+
+``input_specs_for(cfg, shape)`` is the single source of truth for what each
+(arch x input-shape) cell feeds its step function — used identically by the
+dry-run (ShapeDtypeStructs, no allocation) and by smoke tests / examples
+(materialised via ``synthetic_batch_for``).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+
+VISION_FRACTION = 8          # vlm stub: first S/8 positions are patch embeds
+
+
+def input_specs_for(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one cell (training batch or serving request batch)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        if cfg.frontend == "frames":
+            raise ValueError(f"{cfg.name} is encoder-only; no decode inputs")
+        return {"tokens": sd((B, 1), jnp.int32)}
+    # train / prefill
+    if cfg.frontend == "frames":
+        specs = {"frames": sd((B, S, cfg.d_model), dt)}
+    else:
+        specs = {"tokens": sd((B, S), jnp.int32)}
+        if cfg.frontend == "patches":
+            specs["vision_embeds"] = sd((B, S // VISION_FRACTION, cfg.d_model), dt)
+            if cfg.use_mrope:
+                specs["positions"] = sd((3, B, S), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = sd((B, S), jnp.int32)
+    return specs
+
+
+def synthetic_batch_for(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+    """Materialise a batch matching ``input_specs_for`` (smoke scale only)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in input_specs_for(cfg, shape).items():
+        if spec.dtype == jnp.int32:
+            hi = cfg.vocab_size if name in ("tokens", "labels") else spec.shape[-1]
+            out[name] = jnp.asarray(
+                rng.integers(0, max(hi, 2), size=spec.shape), jnp.int32)
+        else:
+            out[name] = jnp.asarray(
+                rng.normal(0, 1, size=spec.shape), jnp.float32).astype(spec.dtype)
+    return out
+
+
+def synthetic_lm_batch(vocab: int, batch: int, seq: int, seed: int = 0):
+    """Next-token-prediction batch from a deterministic mixing stream."""
+    rng = np.random.default_rng(seed)
+    # Zipf-ish marginal + short-range structure so a model can actually learn
+    base = rng.zipf(1.3, size=(batch, seq + 1)) % vocab
+    toks = jnp.asarray(base, jnp.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class SyntheticTokenStream:
+    """Host-sharded deterministic stream with background prefetch semantics.
+
+    Each host materialises only its slice of the global batch; ``__iter__``
+    yields ready batches. (On a real cluster, per-host slicing keys off
+    process_index; here process count is 1 and the interface is what matters.)
+    """
+
+    def __init__(self, vocab: int, global_batch: int, seq: int,
+                 *, host_count: int = 1, host_index: int = 0, seed: int = 0):
+        assert global_batch % host_count == 0
+        self.vocab, self.seq = vocab, seq
+        self.local_batch = global_batch // host_count
+        self.host_index = host_index
+        self.seed = seed
+        self.step = 0
+
+    def next(self):
+        b = synthetic_lm_batch(
+            self.vocab, self.local_batch, self.seq,
+            seed=hash((self.seed, self.host_index, self.step)) % (2**31))
+        self.step += 1
+        return b
+
+    def __iter__(self):
+        while True:
+            yield self.next()

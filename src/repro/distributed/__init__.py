@@ -1,0 +1,6 @@
+from .sharding import Rules, baseline_rules, make_shard_fn, param_shardings  # noqa: F401
+from .checkpoint import CheckpointManager, save, restore, latest_step  # noqa: F401
+from .compression import (compress_with_feedback, init_error_state,  # noqa: F401
+                          quantize_int8, dequantize_int8)
+from .fault import (HealthMonitor, NodeFailure, TrainSupervisor,  # noqa: F401
+                    elastic_remesh, largest_mesh_shape)

@@ -1,0 +1,59 @@
+"""Error-feedback int8 gradient compression for the slow cross-pod axis.
+
+At multi-pod scale the inter-pod (DCN) links are ~10x slower than in-pod ICI;
+compressing the cross-pod gradient contribution is the standard distributed-
+optimization trick. We implement stochastic-free deterministic int8 with
+per-tensor scale + error feedback (the quantisation residual is carried to
+the next step, preserving convergence — Seide et al. / Karimireddy et al.).
+
+The grad_hook integrates with make_train_step: grads are quantised,
+dequantised and the residual returned as state threaded by the caller.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """x (f32) -> (int8 codes, scale). Symmetric per-tensor."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_int8(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, error_state):
+    """Returns (compressed-dequantised grads, new_error_state).
+
+    new_error = (g + e_prev) - dequant(quant(g + e_prev))
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        codes, scale = quantize_int8(corrected)
+        deq = dequantize_int8(codes, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    pairs = jax.tree_util.tree_map(one, grads, error_state)
+    newg = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    newe = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return newg, newe
+
+
+def init_error_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes_saved(params) -> int:
+    """f32 all-reduce vs int8+scale: bytes saved per cross-pod reduction."""
+    total = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    return total * 4 - (total * 1 + 4 * len(jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,9 @@
+from .base import ForecastModelBase  # noqa: F401
+from .linear import LinearForecaster  # noqa: F401
+from .gam import GAMForecaster  # noqa: F401
+from .ann import ANNForecaster  # noqa: F401
+from .lstm import LSTMForecaster  # noqa: F401
+from .transform_models import EnergyFromCurrentModel  # noqa: F401
+
+PAPER_MODELS = {"LR": LinearForecaster, "GAM": GAMForecaster,
+                "ANN": ANNForecaster, "LSTM": LSTMForecaster}

@@ -1,0 +1,135 @@
+"""ANN forecaster (paper §4.2): MLP with 4 hidden ReLU layers and a sigmoid
+output, Adam(1e-3). Paper width 512; default here is user-configurable
+(``hidden``) so CPU tests stay fast. Fleet training = one jitted program with
+vmapped per-instance Adam; fleet scoring = the fleet_mlp kernel (per-instance
+weights megabatch — the paper's serving hot-spot)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.fleet_mlp.ops import fleet_mlp
+from .base import ForecastModelBase
+
+N_HIDDEN_LAYERS = 4
+
+
+def _init(key, f_in, width):
+    sizes = [f_in] + [width] * N_HIDDEN_LAYERS + [1]
+    ws, bs = [], []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        ws.append(jax.random.normal(k, (sizes[i], sizes[i + 1]), jnp.float32)
+                  * jnp.sqrt(2.0 / sizes[i]))
+        bs.append(jnp.zeros((sizes[i + 1],), jnp.float32))
+    return {"w": ws, "b": bs}
+
+
+def _mlp_raw(params, X):
+    h = X
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        h = h @ w + b
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0]
+
+
+def _mlp_out(params, X, y_scale):
+    return jax.nn.sigmoid(_mlp_raw(params, X)) * y_scale
+
+
+def _loss(params, X, y, y_scale):
+    return jnp.mean(jnp.square(_mlp_out(params, X, y_scale) - y))
+
+
+@partial(jax.jit, static_argnames=("epochs", "width", "lr"))
+def _fit_jax(key, X, y, y_scale, *, epochs: int, width: int, lr: float):
+    params = _init(key, X.shape[-1], width)
+    opt = jax.tree_util.tree_map(lambda p: (jnp.zeros_like(p),) * 2, params)
+
+    def step(carry, i):
+        params, mu, nu = carry
+        g = jax.grad(_loss)(params, X, y, y_scale)
+        t = i + 1
+        mu = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
+        nu = jax.tree_util.tree_map(lambda v, gg: 0.999 * v + 0.001 * gg * gg, nu, g)
+        def upd(p, m, v):
+            mh = m / (1 - 0.9 ** t)
+            vh = v / (1 - 0.999 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return (params, mu, nu), None
+
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    (params, _, _), _ = jax.lax.scan(step, (params, z, z),
+                                     jnp.arange(epochs, dtype=jnp.float32))
+    return params
+
+
+_fit_fleet = jax.jit(jax.vmap(
+    lambda key, X, y, ys, epochs, width, lr: _fit_jax(
+        key, X, y, ys, epochs=epochs, width=width, lr=lr),
+    in_axes=(0, 0, 0, 0, None, None, None)),
+    static_argnums=(4, 5, 6))
+
+
+class ANNForecaster(ForecastModelBase):
+    KIND = "ANN"
+    SUPPORTS_FLEET = True
+    DEFAULTS = {**ForecastModelBase.DEFAULTS,
+                "hidden": 64, "epochs": 300, "lr": 1e-3,
+                "target_lags": 48, "weather_lags": 0}
+
+    def _hp(self):
+        up = {**self.DEFAULTS, **self.user_params}
+        return int(up["hidden"]), int(up["epochs"]), float(up["lr"])
+
+    def _fit(self, X, y, rng):
+        width, epochs, lr = self._hp()
+        key = jax.random.PRNGKey(int(rng.integers(2**31)))
+        ys = float(np.abs(y).max() * 1.2 + 1e-6)
+        params = _fit_jax(key, jnp.asarray(X, jnp.float32),
+                          jnp.asarray(y, jnp.float32), ys,
+                          epochs=epochs, width=width, lr=lr)
+        return {"w": [np.asarray(w) for w in params["w"]],
+                "b": [np.asarray(b) for b in params["b"]],
+                "y_scale": ys}
+
+    def _predict(self, params, X):
+        p = {"w": [jnp.asarray(w) for w in params["w"]],
+             "b": [jnp.asarray(b) for b in params["b"]]}
+        return np.asarray(_mlp_out(p, jnp.asarray(X, jnp.float32),
+                                   params["y_scale"]))
+
+    # ------------- fleet hooks -------------
+    @classmethod
+    def _fleet_fit(cls, X, y, rng):
+        N = X.shape[0]
+        keys = jax.random.split(jax.random.PRNGKey(int(rng.integers(2**31))), N)
+        ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
+        width, epochs, lr = 64, 300, 1e-3
+        params = _fit_fleet(keys, jnp.asarray(X, jnp.float32),
+                            jnp.asarray(y, jnp.float32),
+                            jnp.asarray(ys, jnp.float32), epochs, width, lr)
+        out = {}
+        for i, w in enumerate(params["w"]):
+            out[f"w{i}"] = np.asarray(w)
+            out[f"b{i}"] = np.asarray(params["b"][i])
+        out["y_scale"] = ys
+        return out
+
+    @classmethod
+    def _fleet_predict(cls, stacked, X):
+        nl = N_HIDDEN_LAYERS + 1
+        ws = [jnp.asarray(stacked[f"w{i}"]) for i in range(nl)]
+        bs = [jnp.asarray(stacked[f"b{i}"]) for i in range(nl)]
+        raw = fleet_mlp(jnp.asarray(X, jnp.float32)[:, None, :], ws, bs)
+        y = jax.nn.sigmoid(raw[:, 0, 0]) * jnp.asarray(stacked["y_scale"])
+        return np.asarray(y)
+
+    def fleet_hp_key(self):
+        return self._hp()

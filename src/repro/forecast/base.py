@@ -1,0 +1,127 @@
+"""Shared load/transform/score plumbing for the paper's four forecasters.
+
+Each concrete model supplies:
+    _fit(X, y, rng) -> params-dict          (train on standardized features)
+    _predict(params, X) -> yhat             (one-step prediction)
+and optionally the fleet hooks (stacked across instances).
+
+user_params (Listing 2): train_window_days, horizon, frequency, target_lags,
+weather_lags, plus model-specific extras (hidden, epochs, lr, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import numpy as np
+
+from ..core.registry import ModelInterface
+from ..timeseries.transforms import DAY, HOUR
+from .features import (FeatureSpec, design_matrix, hourly_series,
+                       recursive_forecast)
+
+
+class ForecastModelBase(ModelInterface):
+    DEFAULTS = {"train_window_days": 28, "horizon": 24}
+
+    # ------------- paper 4-function workflow -------------
+    def load(self):
+        up = {**self.DEFAULTS, **self.user_params}
+        spec = FeatureSpec.from_params(up)
+        now = float(up.get("now", self.user_params.get("now", 0.0)))
+        t1 = now
+        t0 = t1 - float(up["train_window_days"]) * DAY
+        ctx = self.context
+        times, target = hourly_series(self.system, ctx, t0, t1, spec.step)
+        ent = ctx.entity
+        temps = self.system.weather.forecast(ent.lat, ent.lon, t0, times) \
+            if spec.use_weather else np.zeros_like(times)
+        self._loaded = (spec, times, target, temps, now)
+        return self._loaded
+
+    def transform(self):
+        spec, times, target, temps, now = self._loaded
+        X, y = design_matrix(spec, times, target, temps)
+        mu, sd = X.mean(0), X.std(0) + 1e-8
+        self._xy = ((X - mu) / sd, y, mu, sd)
+        return self._xy
+
+    def train(self) -> dict:
+        self.load()
+        X, y, mu, sd = self.transform()
+        import zlib                      # stable across processes (hash() is salted)
+        rng = np.random.default_rng(zlib.crc32(self.model_id.encode()))
+        params = self._fit(X, y, rng)
+        return {"kind": self.KIND, "params": params, "mu": mu, "sd": sd,
+                "y_scale": float(np.abs(y).max() + 1e-6)}
+
+    def score(self, model_object) -> Tuple[np.ndarray, np.ndarray]:
+        self.load()
+        spec, times, target, temps, now = self._loaded
+        up = {**self.DEFAULTS, **self.user_params}
+        H = int(up["horizon"])
+        warm = max(spec.target_lags, spec.weather_lags) + 1
+        ent = self.context.entity
+        # history grid ends at now-step; the first unknown interval is AT now
+        fut_t = now + spec.step * np.arange(0, H)
+        temps_future = self.system.weather.forecast(ent.lat, ent.lon, now, fut_t)
+        mu, sd = model_object["mu"], model_object["sd"]
+
+        def predict(x):
+            return self._predict(model_object["params"], (x - mu) / sd)
+
+        vals = recursive_forecast(predict, spec, target[-warm:], temps[-warm:],
+                                  temps_future, now, H)
+        return fut_t, vals
+
+    # ------------- fleet plumbing (stacked across instances) -------------
+    @classmethod
+    def _fleet_xy(cls, instances) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        Xs, ys, mus, sds = [], [], [], []
+        for inst in instances:
+            inst.load()
+            X, y, mu, sd = inst.transform()
+            Xs.append(X), ys.append(y), mus.append(mu), sds.append(sd)
+        return (np.stack(Xs), np.stack(ys), np.stack(mus), np.stack(sds))
+
+    @classmethod
+    def fleet_train(cls, instances: List[ModelInterface]):
+        X, y, mu, sd = cls._fleet_xy(instances)
+        rng = np.random.default_rng(12345)
+        params = cls._fleet_fit(X, y, rng)              # stacked params
+        out = []
+        for i, inst in enumerate(instances):
+            pi = {k: np.asarray(v[i]) for k, v in params.items()}
+            out.append({"kind": cls.KIND, "params": pi, "mu": mu[i],
+                        "sd": sd[i], "y_scale": float(np.abs(y[i]).max() + 1e-6)})
+        return out
+
+    @classmethod
+    def fleet_score(cls, instances: List[ModelInterface], model_objects):
+        spec = None
+        y_hists, temp_hists, temps_futs, fut_ts = [], [], [], []
+        H = None
+        for inst in instances:
+            inst.load()
+            spec, times, target, temps, now = inst._loaded
+            up = {**cls.DEFAULTS, **inst.user_params}
+            H = int(up["horizon"])
+            warm = max(spec.target_lags, spec.weather_lags) + 1
+            ent = inst.context.entity
+            fut_t = now + spec.step * np.arange(0, H)
+            temps_futs.append(inst.system.weather.forecast(ent.lat, ent.lon, now, fut_t))
+            y_hists.append(target[-warm:])
+            temp_hists.append(temps[-warm:])
+            fut_ts.append(fut_t)
+        mu = np.stack([m["mu"] for m in model_objects])
+        sd = np.stack([m["sd"] for m in model_objects])
+        stacked = {k: np.stack([m["params"][k] for m in model_objects])
+                   for k in model_objects[0]["params"]}
+
+        def predict(x):                                  # x: (N, F)
+            return cls._fleet_predict(stacked, (x - mu) / sd)
+
+        t_start = fut_ts[0][0]
+        vals = recursive_forecast(predict, spec, np.stack(y_hists),
+                                  np.stack(temp_hists), np.stack(temps_futs),
+                                  t_start, H)
+        return [(fut_ts[i], vals[i]) for i in range(len(instances))]

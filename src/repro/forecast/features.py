@@ -1,0 +1,92 @@
+"""Feature engineering per paper Table 1, expressed against semantic concepts:
+the model code asks for (context.signal, context.entity) history and weather
+at (entity.lat, entity.lon) — never for raw sensor ids.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..timeseries.transforms import (HOUR, align_resample, calendar_features,
+                                     lagged_features)
+
+
+@dataclass(frozen=True)
+class FeatureSpec:
+    target_lags: int = 24        # 1..L hourly lags of the target
+    weather_lags: int = 24       # 1..Lw hourly lags of temperature
+    use_weather: bool = True
+    use_calendar: bool = True
+    step: float = HOUR
+
+    @property
+    def n_features(self) -> int:
+        n = self.target_lags
+        if self.use_weather:
+            n += 1 + self.weather_lags
+        if self.use_calendar:
+            n += 5
+        return n
+
+    @classmethod
+    def from_params(cls, up: dict) -> "FeatureSpec":
+        return cls(target_lags=int(up.get("target_lags", 24)),
+                   weather_lags=int(up.get("weather_lags", 24)),
+                   use_weather=bool(up.get("use_weather", True)),
+                   use_calendar=bool(up.get("use_calendar", True)),
+                   step=float(up.get("frequency", HOUR)))
+
+
+def hourly_series(system, ctx, t0: float, t1: float, step: float) -> Tuple[np.ndarray, np.ndarray]:
+    t, v = system.store.read(ctx.ts_id, t0 - step, t1 + step)
+    return align_resample(t, v, step=step, start=t0, end=t1)
+
+
+def design_matrix(spec: FeatureSpec, times, target, temps) -> Tuple[np.ndarray, np.ndarray]:
+    """Rows t -> predict target[t] from lags/calendar/weather. Drops warmup."""
+    cols = [lagged_features(target, range(1, spec.target_lags + 1))]
+    if spec.use_weather:
+        cols.append(temps[:, None])
+        cols.append(lagged_features(temps, range(1, spec.weather_lags + 1)))
+    if spec.use_calendar:
+        cols.append(calendar_features(times))
+    X = np.concatenate(cols, axis=1)
+    warm = max(spec.target_lags, spec.weather_lags if spec.use_weather else 0)
+    return X[warm:], np.asarray(target, np.float64)[warm:]
+
+
+def step_features(spec: FeatureSpec, y_hist: np.ndarray, temp_hist: np.ndarray,
+                  t_next: float) -> np.ndarray:
+    """Feature row(s) for ONE next step given trailing history.
+    y_hist/temp_hist: (..., >=lags) trailing windows (last element = t-1)."""
+    tl, wl = spec.target_lags, spec.weather_lags
+    cols = [y_hist[..., -1: -tl - 1: -1]]              # lag1..lagL
+    if spec.use_weather:
+        cols.append(temp_hist[..., -1:])               # temp at ~t (forecast)
+        cols.append(temp_hist[..., -2: -wl - 2: -1])
+    if spec.use_calendar:
+        cal = calendar_features(np.asarray([t_next]))[0]
+        cal = np.broadcast_to(cal, y_hist.shape[:-1] + (5,))
+        cols.append(cal)
+    return np.concatenate(cols, axis=-1)
+
+
+def recursive_forecast(predict_fn, spec: FeatureSpec, y_hist, temp_hist,
+                       temps_future, t_start: float, horizon: int):
+    """Roll a one-step model forward ``horizon`` steps (recursive strategy).
+    Vectorised over leading dims: y_hist (..., L), temps_future (..., H).
+    predict_fn maps (..., F) -> (...,). Returns (..., H)."""
+    y_hist = np.array(y_hist, np.float64)
+    temp_hist = np.array(temp_hist, np.float64)
+    preds = []
+    for h in range(horizon):
+        t_next = t_start + h * spec.step
+        temp_hist = np.concatenate(
+            [temp_hist, temps_future[..., h: h + 1]], axis=-1)
+        x = step_features(spec, y_hist, temp_hist, t_next)
+        yh = np.asarray(predict_fn(x), np.float64)
+        preds.append(yh)
+        y_hist = np.concatenate([y_hist, yh[..., None]], axis=-1)
+    return np.stack(preds, axis=-1)

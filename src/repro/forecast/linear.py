@@ -1,0 +1,44 @@
+"""LR forecaster (paper Table 1): ridge regression on weather + lag +
+calendar features. Closed-form fit; fleet path is a vmapped solve."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import ForecastModelBase
+
+
+def _ridge_fit(X, y, lam=1e-2):
+    Xb = jnp.concatenate([X, jnp.ones(X.shape[:-1] + (1,))], -1)
+    A = Xb.T @ Xb + lam * jnp.eye(Xb.shape[-1])
+    b = Xb.T @ y
+    return jnp.linalg.solve(A, b)
+
+
+_ridge_fit_j = jax.jit(_ridge_fit)
+_ridge_fit_fleet = jax.jit(jax.vmap(_ridge_fit, in_axes=(0, 0, None)),
+                           static_argnums=())
+
+
+class LinearForecaster(ForecastModelBase):
+    KIND = "LR"
+    SUPPORTS_FLEET = True
+
+    def _fit(self, X, y, rng):
+        theta = np.asarray(_ridge_fit_j(jnp.asarray(X), jnp.asarray(y)))
+        return {"theta": theta}
+
+    def _predict(self, params, X):
+        th = params["theta"]
+        return np.asarray(X) @ th[:-1] + th[-1]
+
+    @classmethod
+    def _fleet_fit(cls, X, y, rng):
+        theta = np.asarray(_ridge_fit_fleet(jnp.asarray(X), jnp.asarray(y), 1e-2))
+        return {"theta": theta}
+
+    @classmethod
+    def _fleet_predict(cls, stacked, X):
+        th = stacked["theta"]                        # (N, F+1)
+        return np.einsum("nf,nf->n", np.asarray(X), th[:, :-1]) + th[:, -1]

@@ -1,0 +1,141 @@
+"""LSTM forecaster (paper §4.2): 2 stacked LSTM layers over the last 24
+hourly target values, sigmoid-scaled output, Adam(1e-3). Paper hidden 512;
+``hidden`` user param keeps CPU runs fast. Fleet = vmapped training."""
+from __future__ import annotations
+
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import ForecastModelBase
+from .features import FeatureSpec
+
+N_LAYERS = 2
+
+
+def _init(key, width):
+    params = {}
+    in_dim = 1
+    for l in range(N_LAYERS):
+        key, k1, k2 = jax.random.split(key, 3)
+        params[f"wx{l}"] = jax.random.normal(k1, (in_dim, 4 * width)) \
+            * jnp.sqrt(1.0 / max(in_dim, 1))
+        params[f"wh{l}"] = jax.random.normal(k2, (width, 4 * width)) \
+            * jnp.sqrt(1.0 / width)
+        params[f"b{l}"] = jnp.zeros((4 * width,))
+        in_dim = width
+    key, k = jax.random.split(key)
+    params["wo"] = jax.random.normal(k, (width, 1)) * jnp.sqrt(1.0 / width)
+    params["bo"] = jnp.zeros((1,))
+    return params
+
+
+def _lstm_layer(params, l, xs):
+    """xs: (T, B, D) -> (T, B, W)."""
+    W = params[f"wh{l}"].shape[0]
+    B = xs.shape[1]
+
+    def step(carry, x):
+        h, c = carry
+        z = x @ params[f"wx{l}"] + h @ params[f"wh{l}"] + params[f"b{l}"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, W))
+    (_, _), hs = jax.lax.scan(step, (h0, h0), xs)
+    return hs
+
+
+def _lstm_out(params, seqs, y_scale):
+    """seqs: (B, T) normalised target window -> (B,) prediction."""
+    xs = seqs.T[:, :, None]                       # (T, B, 1)
+    for l in range(N_LAYERS):
+        xs = _lstm_layer(params, l, xs)
+    h_last = xs[-1]                               # (B, W)
+    raw = (h_last @ params["wo"] + params["bo"])[:, 0]
+    return jax.nn.sigmoid(raw) * y_scale
+
+
+def _loss(params, seqs, y, y_scale):
+    return jnp.mean(jnp.square(_lstm_out(params, seqs, y_scale) - y))
+
+
+@partial(jax.jit, static_argnames=("epochs", "width", "lr"))
+def _fit_jax(key, seqs, y, y_scale, *, epochs: int, width: int, lr: float):
+    params = _init(key, width)
+
+    def step(carry, i):
+        params, mu, nu = carry
+        g = jax.grad(_loss)(params, seqs, y, y_scale)
+        t = i + 1
+        mu = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
+        nu = jax.tree_util.tree_map(lambda v, gg: 0.999 * v + 0.001 * gg * gg, nu, g)
+        def upd(p, m, v):
+            mh = m / (1 - 0.9 ** t)
+            vh = v / (1 - 0.999 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return (params, mu, nu), None
+
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    (params, _, _), _ = jax.lax.scan(step, (params, z, z),
+                                     jnp.arange(epochs, dtype=jnp.float32))
+    return params
+
+
+class LSTMForecaster(ForecastModelBase):
+    """Sequence model: features are the raw 24-lag window (Table 1)."""
+    KIND = "LSTM"
+    SUPPORTS_FLEET = True
+    DEFAULTS = {**ForecastModelBase.DEFAULTS,
+                "hidden": 32, "epochs": 200, "lr": 1e-3,
+                "target_lags": 24, "use_weather": False, "use_calendar": False}
+
+    def _hp(self):
+        up = {**self.DEFAULTS, **self.user_params}
+        return int(up["hidden"]), int(up["epochs"]), float(up["lr"])
+
+    def _fit(self, X, y, rng):
+        # X rows are standardized [lag1..lag24]; reverse to time order
+        width, epochs, lr = self._hp()
+        seqs = jnp.asarray(X[:, ::-1], jnp.float32)
+        ys = float(np.abs(y).max() * 1.2 + 1e-6)
+        key = jax.random.PRNGKey(int(rng.integers(2**31)))
+        params = _fit_jax(key, seqs, jnp.asarray(y, jnp.float32), ys,
+                          epochs=epochs, width=width, lr=lr)
+        return {**{k: np.asarray(v) for k, v in params.items()}, "y_scale": ys}
+
+    def _predict(self, params, X):
+        p = {k: jnp.asarray(v) for k, v in params.items() if k != "y_scale"}
+        X = np.asarray(X)
+        single = X.ndim == 1
+        X = np.atleast_2d(X)
+        out = _lstm_out(p, jnp.asarray(X[:, ::-1], jnp.float32),
+                        params["y_scale"])
+        out = np.asarray(out)
+        return out[0] if single else out
+
+    @classmethod
+    def _fleet_fit(cls, X, y, rng):
+        N = X.shape[0]
+        keys = jax.random.split(jax.random.PRNGKey(int(rng.integers(2**31))), N)
+        ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
+        fit = jax.vmap(lambda k, s, yy, sc: _fit_jax(
+            k, s, yy, sc, epochs=200, width=32, lr=1e-3))
+        params = fit(keys, jnp.asarray(X[:, :, ::-1], jnp.float32),
+                     jnp.asarray(y, jnp.float32), jnp.asarray(ys, jnp.float32))
+        return {**{k: np.asarray(v) for k, v in params.items()},
+                "y_scale": ys}
+
+    @classmethod
+    def _fleet_predict(cls, stacked, X):
+        p = {k: jnp.asarray(v) for k, v in stacked.items() if k != "y_scale"}
+        X = jnp.asarray(np.asarray(X)[:, ::-1], jnp.float32)
+        out = jax.vmap(lambda pp, xx, sc: _lstm_out(pp, xx[None], sc)[0])(
+            p, X, jnp.asarray(stacked["y_scale"], jnp.float32))
+        return np.asarray(out)

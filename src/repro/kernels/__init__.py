@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (validated interpret=True on CPU) with pure-jnp oracles."""

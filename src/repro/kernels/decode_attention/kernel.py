@@ -1,0 +1,86 @@
+"""Pallas TPU single-token GQA decode attention against a KV cache.
+
+Memory-bound by design: the KV cache streams HBM->VMEM in ``block_k`` tiles;
+(m, l, acc) carries live in VMEM scratch across cache blocks; per-request
+``lengths`` masks invalid cache slots. Grid: (B*KV, cache blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_k: int, nk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    k_start = j * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        v = v_ref[0, :, 0].astype(jnp.float32)            # (bk, D)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
+                            block_k: int = 512, interpret: bool = False):
+    B, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = D ** -0.5
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+
+    qh = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    lengths = lengths.astype(jnp.int32)
+
+    grid = (B * KV, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, j: (h // KV,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda h, j: (h // KV, j, h % KV, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda h, j: (h // KV, j, h % KV, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qh, k_cache, v_cache)
+    return out.reshape(B, H, D)

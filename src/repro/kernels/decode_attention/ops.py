@@ -1,0 +1,22 @@
+"""jit'd public entry point for single-token GQA decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import resolve
+from .ref import decode_attention_reference
+
+
+@partial(jax.jit, static_argnames=("impl", "block_k"))
+def decode_attention(q, k_cache, v_cache, lengths, *, impl: str | None = None,
+                     block_k: int = 512):
+    """q: (B,H,D), caches: (B,S,KV,D), lengths: (B,) -> (B,H,D)."""
+    impl = resolve(impl)
+    if impl == "xla":
+        return decode_attention_reference(q, k_cache, v_cache, lengths)
+    from .kernel import decode_attention_pallas
+    return decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                   block_k=block_k,
+                                   interpret=(impl == "pallas_interpret"))

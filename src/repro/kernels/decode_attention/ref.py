@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for single-token GQA decode attention against a KV cache.
+
+    q:        (B, H, D)        one new token per request
+    k_cache:  (B, S, KV, D)
+    v_cache:  (B, S, KV, D)
+    lengths:  (B,) int32       number of valid cache entries per request
+Returns (B, H, D). float32 accumulation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_reference(q, k_cache, v_cache, lengths, *,
+                               scale: float | None = None):
+    B, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    assert H % KV == 0
+    G = H // KV
+    if scale is None:
+        scale = D ** -0.5
+
+    # f32 ACCUMULATION without materialising an f32 copy of the cache:
+    # dots take the native (bf16) operands with preferred_element_type=f32
+    # (MXU semantics); the scale applies to the f32 scores.
+    qg = q.reshape(B, KV, G, D)
+    # einsum on the native (B,S,KV,D) layout: no materialised transpose
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]         # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32).reshape(B, H, D)
+    return o.astype(q.dtype)

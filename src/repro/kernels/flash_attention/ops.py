@@ -1,0 +1,22 @@
+"""jit'd public entry point for flash GQA attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import resolve
+from .xla import attention_xla
+
+
+@partial(jax.jit, static_argnames=("causal", "impl", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str | None = None,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B,S,H,D), k/v: (B,S,KV,D) -> (B,S,H,D)."""
+    impl = resolve(impl)
+    if impl == "xla":
+        return attention_xla(q, k, v, causal=causal)
+    from .kernel import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for blocked (flash) GQA attention.
+
+Shapes (time-major per batch):
+    q: (B, S_q, H, D)    k,v: (B, S_kv, KV, D)    with H % KV == 0.
+Accumulation in float32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        scale: float | None = None,
+                        q_offset: int | None = None):
+    """O(S^2) reference attention with GQA head-group broadcast.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (for chunked /
+    decode use). Defaults to S_kv - S_q (q block ends aligned with kv end).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    if scale is None:
+        scale = D ** -0.5
+    if q_offset is None:
+        q_offset = Skv - Sq
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # (B, KV, G, Sq, D) x (B, KV, Skv, D) -> (B, KV, G, Sq, Skv)
+    qg = qf.reshape(B, Sq, KV, G, D).transpose(0, 2, 3, 1, 4)
+    kg = kf.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgqd,bkud->bkgqu", qg, kg)
+
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    vg = vf.transpose(0, 2, 1, 3)
+    o = jnp.einsum("bkgqu,bkud->bkgqd", p, vg)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return o.astype(q.dtype)

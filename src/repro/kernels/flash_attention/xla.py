@@ -1,0 +1,54 @@
+"""Memory-sane XLA attention: q-chunked with f32 accumulation.
+
+This is the production XLA path (used when the Pallas kernel is not engaged,
+e.g. CPU dry-run): scores are materialised only for one q-chunk at a time,
+so peak temp memory is O(B * H * chunk * S) instead of O(B * H * S^2).
+Numerically identical to ref.attention_reference (same masked softmax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_xla(q, k, v, *, causal: bool = True, scale: float | None = None,
+                  q_chunk: int = 1024):
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if scale is None:
+        scale = D ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    nq = Sq // q_chunk
+    q_offset = Skv - Sq
+
+    # (B, KV, G, Sq, D) view of q; k/v as (B, KV, Skv, D). Dots accumulate in
+    # f32 via preferred_element_type — no materialised f32 copies of k/v.
+    qg = q.reshape(B, Sq, KV, G, D)
+    qg = qg.transpose(0, 2, 3, 1, 4).reshape(B, KV, G, nq, q_chunk, D)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    kpos = jnp.arange(Skv)
+
+    def chunk_fn(ci):
+        qc = jax.lax.dynamic_index_in_dim(qg, ci, axis=3, keepdims=False)
+        s = jnp.einsum("bkgqd,bkud->bkgqu", qc, kg,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = ci * q_chunk + jnp.arange(q_chunk) + q_offset
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqu,bkud->bkgqd", p.astype(v.dtype), vg,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)     # stacked chunk outputs stay compact
+
+    # remat per chunk: backward recomputes scores/probs instead of saving the
+    # O(chunk x S) softmax residuals — the XLA analogue of flash attention's
+    # recompute-in-backward (the Pallas kernel does the same in VMEM).
+    chunk_fn = jax.checkpoint(chunk_fn)
+    o = jax.lax.map(chunk_fn, jnp.arange(nq))            # (nq,B,KV,G,qc,D)
+    o = o.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, Sq, D)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return o.astype(q.dtype)

@@ -1,0 +1,21 @@
+"""jit'd public entry point for the fleet-batched per-instance-weights MLP."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import resolve
+from .ref import fleet_mlp_reference
+
+
+@partial(jax.jit, static_argnames=("impl", "block_n"))
+def fleet_mlp(x, weights, biases, *, impl: str | None = None, block_n: int = 8):
+    """x: (N,b,F); weights/biases: per-layer stacks with leading N.
+    Returns (N,b,O). ReLU between layers; final layer linear."""
+    impl = resolve(impl)
+    if impl == "xla":
+        return fleet_mlp_reference(x, weights, biases)
+    from .kernel import fleet_mlp_pallas
+    return fleet_mlp_pallas(x, weights, biases, block_n=block_n,
+                            interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,22 @@
+"""jit'd public entry points for the Mamba2 SSD scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import resolve
+from .ref import ssd_chunked, ssd_decode_step  # noqa: F401  (decode re-export)
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def ssd_scan(x, dt, A, Bm, Cm, D, init_state=None, *, impl: str | None = None,
+             chunk: int = 64):
+    """Chunked SSD scan. Returns (y, final_state). See ref.py for shapes."""
+    impl = resolve(impl)
+    chunk = min(chunk, x.shape[1])
+    if impl == "xla":
+        return ssd_chunked(x, dt, A, Bm, Cm, D, init_state, chunk=chunk)
+    from .kernel import ssd_scan_pallas
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, D, init_state, chunk=chunk,
+                           interpret=(impl == "pallas_interpret"))

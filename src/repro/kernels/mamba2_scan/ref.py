@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for the Mamba2 SSD scan.
+
+Two references:
+  * ``ssd_sequential`` — the literal per-timestep recurrence (ground truth).
+  * ``ssd_chunked``    — the matmul-heavy chunked decomposition (what the
+                         Pallas kernel implements); tested against sequential.
+
+Shapes (G = groups, usually 1; H heads, P head channels, N state):
+    x:  (B, S, H, P)     dt: (B, S, H)       A: (H,)   [negative decay rates]
+    Bm: (B, S, G, N)     Cm: (B, S, G, N)    D: (H,)
+    init_state: (B, H, P, N) or None
+Returns y: (B, S, H, P), final_state: (B, H, P, N).
+
+Recurrence (per head h, discretised):
+    a_t = exp(dt_t * A_h)                         scalar per (t, h)
+    S_t = a_t * S_{t-1} + dt_t * x_t B_t^T        (P, N)
+    y_t = S_t C_t + D_h * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(m, H):
+    # (B, S, G, N) -> (B, S, H, N) by repeating each group over its heads
+    B, S, G, N = m.shape
+    assert H % G == 0
+    return jnp.repeat(m, H // G, axis=2)
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, D, init_state=None):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = _expand_groups(Bm.astype(jnp.float32), H)
+    Cf = _expand_groups(Cm.astype(jnp.float32), H)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                     # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        a = jnp.exp(dtt * Af)[..., None, None]    # (B,H,1,1)
+        dBx = (dtt[..., None] * xt)[..., None] * Bt[..., None, :]  # (B,H,P,N)
+        state = a * state + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct) + Df[None, :, None] * xt
+        return state, y
+
+    inputs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+              Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, s0, inputs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    return y, final
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, init_state=None, *, chunk: int = 64):
+    """Chunked SSD: intra-chunk dense matmuls + inter-chunk state recurrence.
+
+    TPU-idiomatic: all O(S) work is MXU matmuls over (chunk x chunk) /
+    (chunk x N) tiles; only n_chunks sequential steps carry state.
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, H)
+    Bf = _expand_groups(Bm.astype(jnp.float32), H).reshape(B, nc, chunk, H, N)
+    Cf = _expand_groups(Cm.astype(jnp.float32), H).reshape(B, nc, chunk, H, N)
+    Af = A.astype(jnp.float32)
+
+    # cumulative log-decay within each chunk: l[t] = sum_{u<=t} dt_u * A
+    seg = dtf * Af[None, None, None, :]              # (B,nc,c,H)
+    cum = jnp.cumsum(seg, axis=2)                    # inclusive
+    total = cum[:, :, -1, :]                         # (B,nc,H) chunk total
+
+    # intra-chunk (causal) kernel: L[t,u] = exp(cum[t]-cum[u]) for u<=t
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,c,c,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+
+    # y_intra[t] = sum_{u<=t} L[t,u] * (C_t . B_u) * dt_u * x_u
+    # Cf: (B,nc,c,H,N), Bf: (B,nc,c,H,N) -> scores (B,nc,c_t,c_u,H)
+    # einsum labels: b=batch, c=chunk index, t/u=time-in-chunk, n=state dim
+    CB = jnp.einsum("bcthn,bcuhn->bctuh", Cf, Bf)
+    W = CB * Lmat                                    # (B,nc,t,u,H)
+    dx = dtf[..., None] * xf                         # (B,nc,c,H,P)
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", W, dx)
+
+    # chunk state contribution: states_c = sum_u exp(total - cum[u]) dt_u x_u B_u^T
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)           # (B,nc,c,H)
+    SB = jnp.einsum("bcuh,bcuhp,bcuhn->bchpn", decay_to_end * dtf, xf, Bf)
+
+    # inter-chunk recurrence over nc chunks
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    chunk_decay = jnp.exp(total)                     # (B,nc,H)
+
+    def step(state, inp):
+        sb, cd = inp                                 # (B,H,P,N), (B,H)
+        prev = state
+        state = cd[..., None, None] * state + sb
+        return state, prev                           # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (SB.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,H,P,N)
+
+    # y_inter[t] = C_t . (exp(cum[t]) * prev_state)
+    y_inter = jnp.einsum("bcthn,bchpn,bcth->bcthp",
+                         Cf, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm, D):
+    """One-token state update. x:(B,H,P) dt:(B,H) Bm/Cm:(B,G,N) state:(B,H,P,N)."""
+    H = x.shape[1]
+    Bf = jnp.repeat(Bm.astype(jnp.float32), H // Bm.shape[1], axis=1)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), H // Cm.shape[1], axis=1)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32))[..., None, None]
+    state = a * state + (dtf[..., None] * xf)[..., None] * Bf[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cf) + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,100 @@
+"""Pallas TPU chunked RWKV6 (Finch) WKV scan with data-dependent decay.
+
+Unlike the factorised XLA path (which must clamp exp(-cum)), the kernel
+materialises the masked per-channel decay D_{u+1:t} = exp(cum_excl[t]-cum[u])
+EXACTLY per (chunk x chunk x K) tile in VMEM — numerically safe for any decay
+because the masked exponent is always <= 0. Cross-chunk state (K, V) carried
+in VMEM scratch. Grid: (B, H, chunks), chunk innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, st_out_ref, state_ref,
+            *, chunk: int, nc: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, 0, :, 0].astype(jnp.float32)            # (c, K)
+    k = k_ref[0, 0, :, 0].astype(jnp.float32)
+    v = v_ref[0, 0, :, 0].astype(jnp.float32)            # (c, V)
+    w = w_ref[0, 0, :, 0].astype(jnp.float32)            # (c, K) in (0,1)
+    u = u_ref[0].astype(jnp.float32)                     # (K,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)                       # (c, K) inclusive
+    cum_excl = cum - logw
+    total = cum[-1]                                      # (K,)
+
+    # exact masked decay tile: rel[t,u,k] = cum_excl[t,k] - cum[u,k] (u < t)
+    rel = cum_excl[:, None, :] - cum[None, :, :]         # (c, c, K)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dec = jnp.where(tri[:, :, None], jnp.exp(rel), 0.0)
+
+    scores = jnp.einsum("tk,uk,tuk->tu", r, k, dec)      # (c, c)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)          # (c,)
+    y_intra = scores @ v + diag[:, None] * v
+
+    prev = state_ref[...]                                # (K, V)
+    y_inter = (r * jnp.exp(cum_excl)) @ prev
+    y_ref[0, 0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    k_tail = k * jnp.exp(total[None, :] - cum)           # (c, K)
+    state_ref[...] = jnp.exp(total)[:, None] * prev + k_tail.T @ v
+
+    @pl.when(c == nc - 1)
+    def _emit():
+        st_out_ref[0, 0] = state_ref[...]
+
+
+def wkv6_scan_pallas(r, k, v, w, u, init_state=None, *, chunk: int = 32,
+                     interpret: bool = False):
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    assert init_state is None, "kernel path starts from zero state (prefill)"
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def prep(t, last):
+        return t.reshape(B, nc, chunk, H, last)[:, :, :, :, :] \
+                .transpose(0, 1, 2, 3, 4)
+
+    rr = r.reshape(B, nc, chunk, H, K)
+    kk = k.reshape(B, nc, chunk, H, K)
+    vv = v.reshape(B, nc, chunk, H, V)
+    ww = w.reshape(B, nc, chunk, H, K)
+
+    grid = (B, H, nc)
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, K), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1, K), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1, V), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1, K), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, V), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, chunk, H, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, u)
+    return y.reshape(B, S, H, V), st

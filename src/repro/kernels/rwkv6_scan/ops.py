@@ -1,0 +1,22 @@
+"""jit'd public entry points for the RWKV6 WKV scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import resolve
+from .ref import wkv6_chunked, wkv6_decode_step  # noqa: F401
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def wkv6_scan(r, k, v, w, u, init_state=None, *, impl: str | None = None,
+              chunk: int = 32):
+    """Chunked WKV6 scan. Returns (y, final_state). See ref.py for shapes."""
+    impl = resolve(impl)
+    chunk = min(chunk, r.shape[1])
+    if impl == "xla":
+        return wkv6_chunked(r, k, v, w, u, init_state, chunk=chunk)
+    from .kernel import wkv6_scan_pallas
+    return wkv6_scan_pallas(r, k, v, w, u, init_state, chunk=chunk,
+                            interpret=(impl == "pallas_interpret"))

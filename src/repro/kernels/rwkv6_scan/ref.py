@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for the RWKV-6 (Finch) WKV scan with data-dependent decay.
+
+Per head (K = head key dim, V = head value dim, here K == V == head_size):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+Shapes:
+    r, k, w: (B, S, H, K)   v: (B, S, H, V)   u: (H, K)
+    w in (0, 1): already exp(-exp(..)).   state: (B, H, K, V)
+Returns y: (B, S, H, V), final_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_sequential(r, k, v, w, u, init_state=None):
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    s0 = (jnp.zeros((B, H, K, V), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                         # (B,H,K) (B,H,K) (B,H,V) (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    inputs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    final, ys = jax.lax.scan(step, s0, inputs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), final
+
+
+def wkv6_chunked(r, k, v, w, u, init_state=None, *, chunk: int = 32):
+    """Chunked WKV6: log-space cumulative decays + dense intra-chunk matmuls.
+
+    Within a chunk (positions t, u, 0-indexed):
+      y_t  = r_t ( D_{0:t} S_in + sum_{u<t} (D_{u+1:t} k_u) v_u^T + u_bonus k_t v_t^T )
+    where D_{a:b} = prod_{i=a}^{b-1} diag(w_i); computed via cumsum(log w).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    rf = r.astype(jnp.float32).reshape(B, nc, chunk, H, K)
+    kf = k.astype(jnp.float32).reshape(B, nc, chunk, H, K)
+    vf = v.astype(jnp.float32).reshape(B, nc, chunk, H, V)
+    wf = w.astype(jnp.float32).reshape(B, nc, chunk, H, K)
+    uf = u.astype(jnp.float32)
+
+    logw = jnp.log(jnp.maximum(wf, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                   # inclusive: sum_{i<=t} log w_i
+    total = cum[:, :, -1]                            # (B,nc,H,K)
+
+    # decay applied to incoming state for position t: prod_{i<t} w_i = exp(cum[t-1])
+    cum_excl = cum - logw                            # exclusive cumsum
+    r_dec = rf * jnp.exp(cum_excl)                   # r_t * D_{0:t}
+
+    # k_u needs decay D_{u+1:t}: fold exp(-cum[u]) into k, exp(cum_excl[t]) into r.
+    # D_{u+1:t} = exp(cum_excl[t] - cum[u])   (for u < t).
+    # exp(cum_excl) <= 1 is always safe; exp(-cum) grows with aggressive decay,
+    # so clamp the exponent at 80 (f32 overflows ~88). Channels that clamp have
+    # per-step decay so strong that their clipped contribution is negligible —
+    # the Pallas kernel computes the masked (t,u) decay exactly per tile instead.
+    k_dec = kf * jnp.exp(jnp.clip(-cum, a_max=80.0))
+    # strictly-lower-triangular attention (u < t)
+    scores = jnp.einsum("bnthk,bnuhk->bntuh", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(tri[None, None, :, :, None], scores, 0.0)
+    # diagonal (current-token bonus u)
+    diag = jnp.einsum("bnthk,hk,bnthk->bnth", rf, uf, kf)
+    y_intra = (jnp.einsum("bntuh,bnuhv->bnthv", scores, vf)
+               + diag[..., None] * vf)
+
+    # chunk state contribution: S_out = D_total S_in + sum_u D_{u+1:end} k_u v_u^T
+    k_tail = kf * jnp.exp(total[:, :, None] - cum)   # D_{u+1:end} k_u
+    SB = jnp.einsum("bnuhk,bnuhv->bnhkv", k_tail, vf)
+
+    s0 = (jnp.zeros((B, H, K, V), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        sb, tot = inp
+        prev = state
+        state = jnp.exp(tot)[..., None] * state + sb
+        return state, prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (SB.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2, 3)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,H,K,V)
+
+    y_inter = jnp.einsum("bnthk,bnhkv->bnthv", r_dec, prev_states)
+    y = (y_intra + y_inter).reshape(B, S, H, V)
+    return y.astype(r.dtype), final
+
+
+def wkv6_decode_step(state, r, k, v, w, u):
+    """One token. r/k/w:(B,H,K) v:(B,H,V) state:(B,H,K,V)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rf, state + uf[None, :, :, None] * kv)
+    state = wf[..., :, None] * state + kv
+    return y.astype(r.dtype), state

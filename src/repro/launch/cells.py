@@ -1,0 +1,123 @@
+"""Build one dry-run cell: (arch x input-shape x mesh) -> jitted step +
+ShapeDtypeStruct args + shardings. Shared by dryrun.py, the roofline bench
+and the perf-iteration harness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..arch import model as M
+from ..arch.params import shape_structs
+from ..configs import SHAPES, get_config
+from ..configs.base import ModelConfig, ShapeSpec
+from ..data.synthetic import input_specs_for
+from ..distributed.sharding import (Rules, baseline_rules, batch_shardings,
+                                    decode_state_shardings, make_shard_fn,
+                                    param_shardings)
+from ..train import AdamWConfig, make_train_step, state_specs
+from ..train.step import make_decode_step, make_prefill_step
+
+
+@dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    mesh: Any
+    rules: Rules
+    fn: Callable            # jitted
+    args: Tuple             # ShapeDtypeStructs
+    kind: str
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      budget_bytes: float = 4 * 2**30) -> int:
+    """Gradient-accumulation factor so the per-device remat residual stack
+    (num_periods x B_loc x S x d x 2 bytes) fits the activation budget."""
+    import math
+    dp = math.prod(mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names)
+    b_loc = max(1, shape.global_batch // dp)
+    stack = cfg.num_periods * b_loc * shape.seq_len * cfg.d_model * 2
+    mb = 1
+    while stack / mb > budget_bytes and mb * 2 <= b_loc \
+            and shape.global_batch % (mb * 2) == 0:
+        mb *= 2
+    return mb
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               rules: Optional[Rules] = None,
+               opt: AdamWConfig = AdamWConfig(),
+               moe_path: str = "dispatch",
+               remat: bool = True,
+               microbatches: int = 0,
+               scan_unroll: int = 1,
+               serve_dtype: str = "bfloat16",
+               dist_decode: bool = False,
+               cast_params_bf16: bool = False,
+               extra: Optional[dict] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi_pod = "pod" in mesh.axis_names
+    rules = rules or baseline_rules(multi_pod)
+    shard = make_shard_fn(mesh, rules)
+    if microbatches == 0:           # auto-size gradient accumulation
+        microbatches = (auto_microbatches(cfg, shape, mesh)
+                        if shape.kind == "train" else 1)
+
+    pspecs = M.build_param_specs(cfg)
+    in_batch = input_specs_for(cfg, shape)
+    b_shardings = batch_shardings(mesh, rules, in_batch)
+
+    if shape.kind == "train":
+        params = shape_structs(pspecs, jnp.dtype(cfg.param_dtype))
+        p_shard = param_shardings(mesh, rules, pspecs)
+        ostate = state_specs(pspecs, opt)
+        # moments shard exactly like the parameters
+        o_shard = type(ostate)(step=NamedSharding(mesh, P()),
+                               mu=p_shard, nu=p_shard)
+        step = make_train_step(cfg, opt=opt, shard=shard, remat=remat,
+                               moe_path=moe_path, microbatches=microbatches,
+                               scan_unroll=scan_unroll, moe_groups=mesh.size,
+                               cast_params_bf16=cast_params_bf16)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shardings),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        args = (params, ostate, in_batch)
+    elif shape.kind == "prefill":
+        params = shape_structs(pspecs, jnp.dtype(serve_dtype))
+        p_shard = param_shardings(mesh, rules, pspecs)
+        step = make_prefill_step(cfg, shard=shard, moe_path=moe_path,
+                                 moe_groups=mesh.size)
+        fn = jax.jit(step, in_shardings=(p_shard, b_shardings))
+        args = (params, in_batch)
+    else:  # decode
+        params = shape_structs(pspecs, jnp.dtype(serve_dtype))
+        p_shard = param_shardings(mesh, rules, pspecs)
+        dstate = M.decode_state_specs(cfg, shape.global_batch, shape.seq_len,
+                                      jnp.dtype(serve_dtype))
+        s_shard = decode_state_shardings(mesh, rules, cfg, dstate)
+        attn_dist = None
+        if dist_decode:
+            attn_dist = {"mesh": mesh, "seq_axis": "model",
+                         "batch_axes": ("pod", "data") if multi_pod else ("data",)}
+        step = make_decode_step(cfg, shard=shard, moe_path=moe_path,
+                                scan_unroll=scan_unroll, moe_groups=mesh.size,
+                                attn_dist=attn_dist)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, s_shard, b_shardings),
+                     out_shardings=(None, s_shard),
+                     donate_argnums=(1,))
+        args = (params, dstate, in_batch)
+    return Cell(cfg=cfg, shape=shape, mesh=mesh, rules=rules, fn=fn,
+                args=args, kind=shape.kind)
+
+
+def lower_cell(cell: Cell):
+    with cell.mesh:
+        return cell.fn.lower(*cell.args)

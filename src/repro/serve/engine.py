@@ -1,0 +1,165 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduler in the vLLM style, sized for the examples/tests (the
+production-mesh serving path is exercised by the decode/prefill dry-run
+cells): a fixed pool of B cache slots; arriving requests are admitted into
+free slots via single-request prefill, every engine step decodes one token
+for all active slots, finished requests free their slot immediately.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..arch import model as M
+from ..configs.base import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    arrived_at: float = 0.0
+    # filled by the engine:
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 max_seq: int = 256, eos_id: Optional[int] = None,
+                 greedy: bool = True):
+        assert cfg.is_decoder, f"{cfg.name} cannot decode"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.state = M.init_decode_state(cfg, max_slots, max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, s, b: M.decode_step(cfg, p, s, b))
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ------------- request plumbing -------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self):
+        """Prefill pending requests into free slots (token-by-token prefill
+        through the decode path keeps one compiled program; fine at example
+        scale — the prefill_32k dry-run cells cover the batched path)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self._reset_slot(slot)
+            for tok in req.prompt[:-1]:
+                self._step_slot(slot, int(tok))
+            self.slot_req[slot] = req
+            req.tokens = []
+            req._next_input = int(req.prompt[-1])      # type: ignore
+
+    def _reset_slot(self, slot: int):
+        def zero_slot(x):
+            if x.ndim >= 2 and x.shape[1] == self.max_slots:
+                return x.at[:, slot].set(0)
+            return x
+        caches = jax.tree_util.tree_map(zero_slot, self.state["caches"])
+        lengths = self.state["lengths"].at[slot].set(0)
+        self.state = {"caches": caches, "lengths": lengths}
+
+    def _step_slot(self, slot: int, token: int):
+        """Advance ONE slot by one token (prefill path)."""
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        toks[slot] = token
+        logits, new_state = self._decode(self.params, self.state,
+                                         {"tokens": jnp.asarray(toks)})
+        # only this slot's cache/length advance
+        def merge(new, old):
+            if new.ndim >= 2 and new.shape[1] == self.max_slots:
+                return old.at[:, slot].set(new[:, slot])
+            return old
+        caches = jax.tree_util.tree_map(merge, new_state["caches"],
+                                        self.state["caches"])
+        lengths = self.state["lengths"].at[slot].add(1)
+        self.state = {"caches": caches, "lengths": lengths}
+        return np.asarray(logits[slot])
+
+    # ------------- main loop -------------
+    def step(self, now: Optional[float] = None) -> int:
+        """One engine iteration: admit + one decode for all active slots.
+        Returns number of tokens emitted."""
+        now = time.perf_counter() if now is None else now
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        for i in active:
+            toks[i] = self.slot_req[i]._next_input     # type: ignore
+        logits, new_state = self._decode(self.params, self.state,
+                                         {"tokens": jnp.asarray(toks)})
+        logits = np.asarray(logits)
+        # inactive slots must not advance: merge per-slot
+        def merge(new, old):
+            if new.ndim >= 2 and new.shape[1] == self.max_slots:
+                for i in active:
+                    old = old.at[:, i].set(new[:, i])
+                return old
+            return old
+        caches = jax.tree_util.tree_map(merge, new_state["caches"],
+                                        self.state["caches"])
+        lengths = self.state["lengths"]
+        for i in active:
+            lengths = lengths.at[i].add(1)
+        self.state = {"caches": caches, "lengths": lengths}
+
+        emitted = 0
+        for i in active:
+            req = self.slot_req[i]
+            nxt = int(np.argmax(logits[i])) if self.greedy else \
+                int(np.random.default_rng(self.steps).choice(
+                    len(logits[i]), p=_softmax(logits[i])))
+            req.tokens.append(nxt)
+            if req.first_token_at is None:
+                req.first_token_at = now
+            emitted += 1
+            self.tokens_out += 1
+            req._next_input = nxt                       # type: ignore
+            full = int(self.state["lengths"][i]) >= self.max_seq - 1
+            if (len(req.tokens) >= req.max_new_tokens or full
+                    or (self.eos_id is not None and nxt == self.eos_id)):
+                req.done = True
+                req.finished_at = now
+                self.slot_req[i] = None
+        self.steps += 1
+        return emitted
+
+    def run_until_idle(self, max_steps: int = 10_000) -> int:
+        total = 0
+        for _ in range(max_steps):
+            got = self.step()
+            if got == 0 and not self.queue:
+                break
+            total += got
+        return total
+
+
+def _softmax(x):
+    e = np.exp(x - x.max())
+    return e / e.sum()

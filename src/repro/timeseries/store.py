@@ -1,0 +1,94 @@
+"""Append-only knowledge-backed time-series store.
+
+Semantics match the paper's store: ingestion is append-only (irregular,
+possibly out-of-order timestamps allowed), reads return time-sorted views,
+nothing is ever overwritten. Persistence is newline-JSON + NPZ so a real
+backend (the paper used a relational DB) could be swapped behind the same
+interface.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class _Series:
+    times: List[np.ndarray] = field(default_factory=list)
+    values: List[np.ndarray] = field(default_factory=list)
+    count: int = 0
+
+
+class TimeSeriesStore:
+    def __init__(self):
+        self._data: Dict[str, _Series] = {}
+        self._lock = threading.Lock()
+        self.append_count = 0          # ingestion telemetry (Fig. 2 benchmark)
+
+    # ---------------- write path ----------------
+    def append(self, ts_id: str, times, values) -> int:
+        times = np.asarray(times, np.float64).ravel()
+        values = np.asarray(values, np.float64).ravel()
+        assert times.shape == values.shape, (times.shape, values.shape)
+        with self._lock:
+            s = self._data.setdefault(ts_id, _Series())
+            s.times.append(times)
+            s.values.append(values)
+            s.count += times.size
+            self.append_count += times.size
+        return times.size
+
+    # ---------------- read path ----------------
+    def read(self, ts_id: str, start: Optional[float] = None,
+             end: Optional[float] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Time-sorted view of [start, end)."""
+        s = self._data.get(ts_id)
+        if s is None or not s.times:
+            return np.empty(0), np.empty(0)
+        t = np.concatenate(s.times)
+        v = np.concatenate(s.values)
+        order = np.argsort(t, kind="stable")
+        t, v = t[order], v[order]
+        lo = np.searchsorted(t, start) if start is not None else 0
+        hi = np.searchsorted(t, end) if end is not None else t.size
+        return t[lo:hi], v[lo:hi]
+
+    def last_time(self, ts_id: str) -> Optional[float]:
+        t, _ = self.read(ts_id)
+        return float(t[-1]) if t.size else None
+
+    def ids(self) -> List[str]:
+        return list(self._data)
+
+    def length(self, ts_id: str) -> int:
+        s = self._data.get(ts_id)
+        return s.count if s else 0
+
+    def total_points(self) -> int:
+        return sum(s.count for s in self._data.values())
+
+    # ---------------- persistence ----------------
+    def save(self, path: str):
+        p = Path(path)
+        p.mkdir(parents=True, exist_ok=True)
+        arrays = {}
+        for ts_id, s in self._data.items():
+            t, v = self.read(ts_id)
+            arrays[f"t::{ts_id}"] = t
+            arrays[f"v::{ts_id}"] = v
+        np.savez_compressed(p / "timeseries.npz", **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "TimeSeriesStore":
+        st = cls()
+        f = Path(path) / "timeseries.npz"
+        if f.exists():
+            z = np.load(f)
+            ids = {k[3:] for k in z.files if k.startswith("t::")}
+            for ts_id in ids:
+                st.append(ts_id, z[f"t::{ts_id}"], z[f"v::{ts_id}"])
+        return st

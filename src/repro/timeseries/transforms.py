@@ -1,0 +1,106 @@
+"""Time-series transformations (paper §4.1, Fig. 4) + feature engineering
+(Table 1): alignment/resampling of irregular feeds, integration of
+instantaneous signals into energy, lagged features, calendar features.
+All numpy (host-side data prep) — model math lives in JAX.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+
+
+def align_resample(times, values, *, step: float, start: Optional[float] = None,
+                   end: Optional[float] = None, how: str = "mean") -> Tuple[np.ndarray, np.ndarray]:
+    """Aggregate an irregular series onto a regular grid [start, end) with
+    bin width ``step``. Empty bins are filled by forward-fill (then 0)."""
+    t = np.asarray(times, np.float64)
+    v = np.asarray(values, np.float64)
+    if t.size == 0:
+        return np.empty(0), np.empty(0)
+    start = float(t.min() // step * step) if start is None else start
+    end = float(t.max() // step * step + step) if end is None else end
+    nbins = max(int(round((end - start) / step)), 1)
+    idx = np.floor((t - start) / step).astype(np.int64)
+    ok = (idx >= 0) & (idx < nbins)
+    idx, vv = idx[ok], v[ok]
+    sums = np.bincount(idx, weights=vv, minlength=nbins)
+    cnts = np.bincount(idx, minlength=nbins)
+    if how == "sum":
+        out = sums                       # empty bins carry zero mass
+    else:
+        with np.errstate(invalid="ignore"):
+            out = np.where(cnts > 0, sums / np.maximum(cnts, 1), np.nan)
+        # forward-fill gaps (mean/level signals only — never for sums)
+        filled = np.where(cnts > 0)[0]
+        if filled.size:
+            ffidx = np.maximum.accumulate(
+                np.where(cnts > 0, np.arange(nbins), -1))
+            out = np.where(ffidx >= 0, out[np.maximum(ffidx, 0)], 0.0)
+        else:
+            out = np.zeros(nbins)
+    grid = start + step * np.arange(nbins)
+    return grid, out
+
+
+def integrate_to_energy(times, current, *, voltage: float = 230.0,
+                        step: float = 900.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Fig. 4: instantaneous current magnitude [A] at irregular resolution ->
+    energy [kWh] on a regular ``step`` grid (trapezoidal integration of
+    P = V*I over each bin)."""
+    t = np.asarray(times, np.float64)
+    i = np.asarray(current, np.float64)
+    if t.size < 2:
+        return np.empty(0), np.empty(0)
+    order = np.argsort(t)
+    t, i = t[order], i[order]
+    p_kw = voltage * i / 1000.0                         # kW
+    # trapezoid segments, assigned to the bin of their midpoint
+    seg_e = 0.5 * (p_kw[1:] + p_kw[:-1]) * np.diff(t) / HOUR   # kWh
+    mid = 0.5 * (t[1:] + t[:-1])
+    start = float(t[0] // step * step)
+    nbins = int((t[-1] - start) // step) + 1
+    idx = np.floor((mid - start) / step).astype(np.int64)
+    ok = (idx >= 0) & (idx < nbins)
+    energy = np.bincount(idx[ok], weights=seg_e[ok], minlength=nbins)
+    grid = start + step * np.arange(nbins)
+    return grid, energy
+
+
+def lagged_features(series: np.ndarray, lags) -> np.ndarray:
+    """X[t, j] = series[t - lags[j]]; rows with any missing lag are the
+    caller's responsibility (first max(lags) rows)."""
+    s = np.asarray(series, np.float64)
+    lags = list(lags)
+    out = np.zeros((s.size, len(lags)))
+    for j, L in enumerate(lags):
+        out[L:, j] = s[: s.size - L] if L > 0 else s
+        out[:L, j] = s[0]
+    return out
+
+
+def calendar_features(times) -> np.ndarray:
+    """Paper Table 1: time-of-day + week-day features (smooth encodings)."""
+    t = np.asarray(times, np.float64)
+    hod = (t % DAY) / HOUR                    # 0..24
+    dow = ((t // DAY) % 7).astype(np.int64)   # 0..6
+    feats = [np.sin(2 * np.pi * hod / 24), np.cos(2 * np.pi * hod / 24),
+             np.sin(2 * np.pi * dow / 7), np.cos(2 * np.pi * dow / 7),
+             (dow >= 5).astype(np.float64)]
+    return np.stack(feats, axis=1)
+
+
+def train_val_split(times, values, split_time):
+    t = np.asarray(times)
+    m = t < split_time
+    return (t[m], np.asarray(values)[m]), (t[~m], np.asarray(values)[~m])
+
+
+def mape(actual, predicted, eps: float = 1e-9) -> float:
+    a = np.asarray(actual, np.float64)
+    p = np.asarray(predicted, np.float64)
+    denom = np.maximum(np.abs(a), eps)
+    return float(np.mean(np.abs(a - p) / denom) * 100.0)

@@ -1,0 +1,42 @@
+"""Synthetic weather service keyed by (lat, lon) — stands in for the paper's
+external weather-forecast provider. Deterministic: temperature is a smooth
+function of location, season, hour and a location-seeded noise process, so
+train/validation reads are reproducible. ``forecast`` adds horizon-dependent
+noise to mimic forecast degradation."""
+from __future__ import annotations
+
+import numpy as np
+
+DAY = 86400.0
+YEAR = 365.0 * DAY
+
+
+class WeatherService:
+    def __init__(self, seed: int = 7):
+        self.seed = seed
+
+    def _key(self, lat: float, lon: float) -> int:
+        return (self.seed * 1_000_003 + int(lat * 1e4) * 7919
+                + int(lon * 1e4) * 104729) % (2**31 - 1)
+
+    def temperature(self, lat: float, lon: float, times) -> np.ndarray:
+        """Actual temperature at given epoch times (deg C)."""
+        t = np.asarray(times, np.float64)
+        rng = np.random.default_rng(self._key(lat, lon))
+        phase, amp_d, amp_y = rng.uniform(0, 2 * np.pi), rng.uniform(4, 8), rng.uniform(8, 14)
+        base = rng.uniform(8, 18)
+        seasonal = amp_y * np.sin(2 * np.pi * t / YEAR + phase)
+        diurnal = amp_d * np.sin(2 * np.pi * t / DAY - np.pi / 2)
+        slow = 2.0 * np.sin(2 * np.pi * t / (11 * DAY) + phase * 0.7)
+        jitter = 0.3 * np.sin(t / 977.0 + phase)     # deterministic "noise"
+        return base + seasonal + diurnal + slow + jitter
+
+    def forecast(self, lat: float, lon: float, issued_at: float, times) -> np.ndarray:
+        """Forecast issued at ``issued_at`` for target ``times``: the truth
+        plus error growing with lead time (~0.2 degC/day)."""
+        t = np.asarray(times, np.float64)
+        truth = self.temperature(lat, lon, t)
+        lead_days = np.maximum(t - issued_at, 0.0) / DAY
+        rng = np.random.default_rng(self._key(lat, lon) ^ int(issued_at) % 65521)
+        err = rng.normal(0.0, 0.2, size=t.shape) * np.sqrt(1.0 + lead_days)
+        return truth + err

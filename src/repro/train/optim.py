@@ -1,0 +1,80 @@
+"""Minimal pytree AdamW with global-norm clipping (f32 master weights).
+
+Optimizer state shards exactly like the parameters (same tree structure), so
+FSDP rules apply transparently to moments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"    # "bfloat16" is a memory-term lever
+
+
+class AdamWState(NamedTuple):
+    step: Any
+    mu: Any
+    nu: Any
+
+
+def init_state(params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(z, params),
+                      nu=jax.tree_util.tree_map(z, params))
+
+
+def state_specs(param_specs, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    """ShapeDtypeStruct mirror for dry-runs."""
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)  # noqa: E731
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=jax.tree_util.tree_map(z, param_specs),
+                      nu=jax.tree_util.tree_map(z, param_specs))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_update(params, grads, state: AdamWState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}

@@ -1,0 +1,105 @@
+"""Train / serve step builders shared by the launcher, dry-run and tests.
+
+``make_train_step(cfg)`` -> f(params, opt_state, batch) -> (params, opt_state,
+metrics), with optional gradient accumulation (microbatching) and a gradient
+post-processing hook (cross-pod compression lives there).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..arch import model as M
+from ..configs.base import ModelConfig
+from .optim import AdamWConfig, apply_update
+
+_ID = lambda x, names: x  # noqa: E731
+
+
+def make_train_step(cfg: ModelConfig, *, opt: AdamWConfig = AdamWConfig(),
+                    shard: Callable = _ID, remat: bool = True,
+                    moe_path: str = "dispatch", microbatches: int = 1,
+                    grad_hook: Optional[Callable] = None,
+                    scan_unroll: int = 1, moe_groups: int = 0,
+                    cast_params_bf16: bool = False):
+    """Returns train_step(params, opt_state, batch).
+
+    cast_params_bf16: cast the f32 master params to bf16 BEFORE the layer
+    scans, so FSDP all-gathers move bf16 (half the wire) — grads still flow
+    to the f32 masters through the cast (§Perf lever)."""
+
+    def loss_fn(params, batch):
+        if cast_params_bf16:
+            from ..arch.params import cast_tree
+            params = cast_tree(params, jnp.bfloat16)
+        return M.train_loss(cfg, params, batch, shard=shard, remat=remat,
+                            moe_path=moe_path, scan_unroll=scan_unroll,
+                            moe_groups=moe_groups)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def _to_micro(x):
+        # (B, ...) -> (mb, B/mb, ...); M-RoPE positions (3, B, S) keep their
+        # leading 3 inside each microbatch: (3, B, S) -> (mb, 3, B/mb, S)
+        if x.ndim == 3 and x.shape[0] == 3:
+            return x.reshape(3, microbatches, -1, x.shape[2]).transpose(1, 0, 2, 3)
+        return x.reshape((microbatches, -1) + x.shape[1:])
+
+    def _reshard_micro(x):
+        if x.ndim == 4 and x.shape[1] == 3:
+            return shard(x, (None, None, "batch", None))
+        return shard(x, (None, "batch") + (None,) * (x.ndim - 2))
+
+    def accumulated(params, batch):
+        mb = jax.tree_util.tree_map(_to_micro, batch)
+        mb = jax.tree_util.tree_map(_reshard_micro, mb)
+
+        def body(g_acc, xs):
+            grads, metrics = single(params, xs)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return g_acc, metrics
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        g_acc, metrics_stack = jax.lax.scan(body, g0, mb)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, g_acc)
+        metrics = jax.tree_util.tree_map(jnp.mean, metrics_stack)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            grads, metrics = accumulated(params, batch)
+        else:
+            grads, metrics = single(params, batch)
+        if grad_hook is not None:
+            grads = grad_hook(grads)
+        params, opt_state, opt_metrics = apply_update(params, grads, opt_state, opt)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, shard: Callable = _ID,
+                      moe_path: str = "dispatch", moe_groups: int = 0):
+    def prefill(params, batch):
+        return M.forward(cfg, params, batch, mode="prefill", shard=shard,
+                         remat=False, moe_path=moe_path, moe_groups=moe_groups)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, shard: Callable = _ID,
+                     moe_path: str = "dispatch", scan_unroll: int = 1,
+                     moe_groups: int = 0, attn_dist=None):
+    def decode(params, state, batch):
+        return M.decode_step(cfg, params, state, batch, shard=shard,
+                             moe_path=moe_path, scan_unroll=scan_unroll,
+                             moe_groups=moe_groups, attn_dist=attn_dist)
+    return decode

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device. (The 512-device override is
+# reserved for launch/dryrun.py — do NOT set it here.)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

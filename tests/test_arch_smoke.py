@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (assignment requirement): reduced same-family
+config, one forward/train step on CPU, asserting output shapes + no NaNs;
+plus decode-vs-forward consistency for decoder archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arch import model as M
+from repro.configs import get_config, list_archs
+from repro.configs.base import ShapeSpec
+from repro.data.synthetic import synthetic_batch_for
+from repro.train import AdamWConfig, init_state, make_train_step
+
+SMOKE = ShapeSpec("smoke", seq_len=32, global_batch=2, kind="train")
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = synthetic_batch_for(cfg, SMOKE)
+
+    logits, aux = M.forward(cfg, params, batch, mode="train", remat=False)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    step = make_train_step(cfg, opt=AdamWConfig(lr=1e-3))
+    opt = init_state(params)
+    p2, o2, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: non-finite loss"
+    # parameters actually changed
+    before = jax.tree_util.tree_leaves(params)[0]
+    after = jax.tree_util.tree_leaves(p2)[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).is_decoder])
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(x[:-1]), x[-1]) == forward(x)[-1] — the serving path is
+    numerically consistent with training."""
+    cfg = get_config(arch + "-smoke").replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    full, _ = M.forward(cfg, params, {"tokens": toks}, mode="train",
+                        remat=False)
+    pf_logits, state = M.forward(cfg, params, {"tokens": toks[:, :S - 1]},
+                                 mode="prefill", remat=False)
+
+    def pad(x):
+        if x.ndim >= 3 and x.shape[2] == S - 1:        # grow KV capacity by 1
+            w = [(0, 0)] * x.ndim
+            w[2] = (0, 1)
+            return jnp.pad(x, w)
+        return x
+
+    state = {"caches": jax.tree_util.tree_map(pad, state["caches"]),
+             "lengths": state["lengths"]}
+    got, _ = M.decode_step(cfg, params, state, {"tokens": toks[:, S - 1:]})
+    rel = float(jnp.abs(got - full[:, -1]).max()
+                / (jnp.abs(full[:, -1]).max() + 1e-9))
+    assert rel < 2e-3, f"{arch}: prefill+decode rel err {rel}"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).is_decoder])
+def test_decode_steps_finite(arch):
+    cfg = get_config(arch + "-smoke")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = M.init_decode_state(cfg, 2, 16)
+    tok = {"tokens": jnp.ones((2, 1), jnp.int32)}
+    for _ in range(3):
+        logits, state = M.decode_step(cfg, params, state, tok)
+        assert logits.shape == (2, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), arch
+    assert int(state["lengths"][0]) == 3
+
+
+def test_encoder_has_no_decode():
+    cfg = get_config("hubert-xlarge-smoke")
+    with pytest.raises(AssertionError):
+        M.decode_step(cfg, {}, {"lengths": jnp.zeros(2, jnp.int32)}, {})
+
+
+def test_chunked_ce_matches_full():
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = synthetic_batch_for(cfg, SMOKE)
+    l1, _ = M.train_loss(cfg, params, batch, remat=False, loss_chunks=1)
+    l4, _ = M.train_loss(cfg, params, batch, remat=False, loss_chunks=4)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-5)
+
+
+def test_microbatched_step_matches_single():
+    cfg = get_config("qwen3-1.7b-smoke").replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = synthetic_batch_for(
+        cfg, ShapeSpec("smoke4", seq_len=32, global_batch=4, kind="train"))
+    opt = AdamWConfig(lr=1e-3)
+    s1 = make_train_step(cfg, opt=opt, microbatches=1)
+    s2 = make_train_step(cfg, opt=opt, microbatches=2)
+    st = init_state(params, opt)
+    p1, _, m1 = jax.jit(s1)(params, st, batch)
+    p2, _, m2 = jax.jit(s2)(params, st, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+    a = jax.tree_util.tree_leaves(p1)[0]
+    b = jax.tree_util.tree_leaves(p2)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_param_counts_match_published():
+    expect = {"llama3-8b": 8.0e9, "dbrx-132b": 132e9,
+              "llama4-maverick-400b-a17b": 400e9, "qwen3-1.7b": 1.7e9,
+              "internlm2-20b": 20e9, "zamba2-2.7b": 2.7e9,
+              "rwkv6-7b": 7.6e9, "starcoder2-7b": 7.2e9,
+              "qwen2-vl-7b": 7.6e9, "hubert-xlarge": 1.0e9}
+    for arch, n in expect.items():
+        got = M.param_count(get_config(arch))
+        assert abs(got - n) / n < 0.12, (arch, got, n)

@@ -1,0 +1,146 @@
+"""Unit + property tests for the paper's core: registry, scheduler, semantic
+graph, deployments, lineage."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Castor, ModelDeployment, Schedule
+from repro.core.registry import ModelInterface, ModelRegistry
+from repro.core.scheduler import Job, ModelScheduler, bin_jobs
+from repro.core.semantics import Entity, SemanticGraph, Signal
+from repro.core.lineage import Forecast, PredictionStore
+
+
+class _Dummy(ModelInterface):
+    def load(self): pass
+    def transform(self): pass
+    def train(self): return {"w": 1}
+    def score(self, m): return np.arange(3.0), np.ones(3)
+
+
+# ---------------- registry ----------------
+def test_registry_versions_and_immutability():
+    r = ModelRegistry()
+    r.register("pkg", "1.0", _Dummy)
+    r.register("pkg", "1.10", _Dummy)
+    r.register("pkg", "1.2", _Dummy)
+    assert r.resolve_version("pkg") == "1.10"       # numeric, not lexical
+    with pytest.raises(ValueError):
+        r.register("pkg", "1.0", _Dummy)            # immutable artifacts
+    with pytest.raises(KeyError):
+        r.get("nope")
+
+
+# ---------------- scheduler ----------------
+@given(start=st.floats(0, 1e6), every=st.floats(1.0, 1e5),
+       off1=st.floats(0, 1e6), d1=st.floats(0.0, 1e6), d2=st.floats(0.0, 1e6))
+@settings(max_examples=200, deadline=None)
+def test_schedule_occurrences_additive_after_first(start, every, off1, d1, d2):
+    """After the first firing (catch-up collapses history by design),
+    occurrences are additive over consecutive windows and non-negative."""
+    s = Schedule(start=start, every=every)
+    t0 = start + off1
+    t1, t2 = t0 + d1, t0 + d1 + d2
+    a = s.occurrences_due(t0, t1)
+    b = s.occurrences_due(t1, t2)
+    c = s.occurrences_due(t0, t2)
+    assert a >= 0 and b >= 0
+    assert a + b == c
+
+
+def test_schedule_first_poll_fires_once_not_replay():
+    s = Schedule(start=0.0, every=10.0)
+    assert s.occurrences_due(None, 1000.0) == 1
+    assert s.occurrences_due(None, -1.0) == 0
+
+
+def test_scheduler_emits_and_requeues_on_failure():
+    c = Castor()
+    c.publish("pkg", "1.0", _Dummy)
+    c.add_signal("S")
+    c.add_entity("E")
+    c.deploy(ModelDeployment(name="d1", package="pkg", signal="S", entity="E",
+                             train=Schedule(0.0, 100.0),
+                             score=Schedule(0.0, 10.0)))
+    jobs = c.scheduler.poll(0.0)
+    assert {(j.task) for j in jobs} == {"train", "score"}
+    assert c.scheduler.poll(5.0) == []              # nothing due yet
+    jobs2 = c.scheduler.poll(10.0)
+    assert [j.task for j in jobs2] == ["score"]
+    # failure -> re-fires on next poll
+    c.scheduler.mark_failed(jobs2[0])
+    jobs3 = c.scheduler.poll(11.0)
+    assert [j.task for j in jobs3] == ["score"]
+
+
+def test_job_binning_key():
+    j1 = Job("a", "p", "1.0", "score", 0.0, "S", "E1", "k")
+    j2 = Job("b", "p", "1.0", "score", 0.0, "S", "E2", "k")
+    j3 = Job("c", "p", "1.0", "train", 0.0, "S", "E1", "k")
+    bins = bin_jobs([j1, j2, j3])
+    assert len(bins) == 2
+    assert len(bins[j1.bin_key]) == 2
+
+
+# ---------------- semantics ----------------
+def test_semantic_graph_queries():
+    g = SemanticGraph()
+    g.add_signal(Signal("LOAD"))
+    g.add_entity(Entity("SUB", "SUBSTATION"))
+    g.add_entity(Entity("FD", "FEEDER"), parent="SUB")
+    g.add_entity(Entity("P1", "PROSUMER"), parent="FD")
+    g.add_entity(Entity("P2", "PROSUMER"), parent="FD")
+    g.link_timeseries("ts1", "LOAD", "P1")
+    assert [e.name for e in g.find_entities(kind="PROSUMER")] == ["P1", "P2"]
+    assert [e.name for e in g.find_entities(has_signal="LOAD")] == ["P1"]
+    assert [e.name for e in g.find_entities(kind="PROSUMER", under="SUB")] \
+        == ["P1", "P2"]
+    assert g.parent("P1").name == "FD"
+    assert {e.name for e in g.descendants("SUB")} == {"FD", "P1", "P2"}
+
+
+def test_programmatic_fleet_deployment():
+    c = Castor()
+    c.publish("pkg", "1.0", _Dummy)
+    c.add_signal("LOAD")
+    c.add_entity("SUB", "SUBSTATION")
+    for i in range(5):
+        c.add_entity(f"P{i}", "PROSUMER", parent="SUB")
+        if i < 3:                                   # only 3 have data
+            c.link(f"ts{i}", "LOAD", f"P{i}")
+    deps = c.deploy_for_all(package="pkg", signal="LOAD", name_prefix="m",
+                            kind="PROSUMER", score=Schedule(0.0, 60.0))
+    assert len(deps) == 3                           # semantic rule respected
+    assert all(d.name.startswith("m-P") for d in deps)
+
+
+# ---------------- lineage ----------------
+def test_prediction_store_append_only_and_ranking():
+    ps = PredictionStore()
+    t = np.arange(3.0)
+    ps.save(Forecast("m1", "S", "E", 0.0, t, np.ones(3), 1, rank=1))
+    ps.save(Forecast("m2", "S", "E", 0.0, t, 2 * np.ones(3), 1, rank=0))
+    ps.save(Forecast("m1", "S", "E", 10.0, t + 10, 3 * np.ones(3), 2, rank=1))
+    assert len(ps.history("m1")) == 2               # rolling horizons kept
+    assert ps.latest("S", "E").deployment_name == "m1"  # newest wins
+    assert ps.latest("S", "E", at=0.0).deployment_name == "m2"  # rank breaks tie
+    # Fig. 7 view: multiple created_at for one target time
+    ps.save(Forecast("m1", "S", "E", 5.0, np.asarray([10.0]),
+                     np.asarray([9.9]), 2))
+    hz = ps.horizons("m1", 10.0)
+    assert len(hz) == 2 and hz[0][0] == 5.0
+
+
+@given(st.lists(st.tuples(st.floats(0, 100), st.integers(0, 3)), min_size=1,
+                max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_latest_is_max_created_then_min_rank(entries):
+    ps = PredictionStore()
+    t = np.arange(2.0)
+    for i, (created, rank) in enumerate(entries):
+        ps.save(Forecast(f"m{i}", "S", "E", created, t, t, 1, rank=rank))
+    best = ps.latest("S", "E")
+    newest = max(e[0] for e in entries)
+    assert best.created_at == newest
+    min_rank_at_newest = min(r for (cr, r) in entries if cr == newest)
+    assert best.rank == min_rank_at_newest

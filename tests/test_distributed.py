@@ -1,0 +1,122 @@
+"""Distributed runtime: checkpoint/restore (incl. elastic resharding),
+supervisor failure handling, gradient compression properties, mesh logic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import (CheckpointManager, NodeFailure, TrainSupervisor,
+                               compress_with_feedback, dequantize_int8,
+                               init_error_state, largest_mesh_shape,
+                               quantize_int8)
+from repro.distributed.checkpoint import latest_step, restore, save
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)},
+            "s": jnp.asarray(3)}
+    save(tmp_path / "ck", tree, step=7, extra={"note": "x"})
+    got, man = restore(tmp_path / "ck", tree)
+    assert man["step"] == 7 and man["extra"]["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_and_retention(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    t = {"w": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        cm.save_sync(t, step=s)
+    kept = sorted(d.name for d in tmp_path.iterdir())
+    assert kept == ["step-3", "step-4"]
+    assert latest_step(tmp_path) == 4
+
+
+def test_checkpoint_async_double_buffer(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=3)
+    for s in range(3):
+        cm.save_async({"w": jnp.full(4, float(s))}, step=s)
+    cm.wait()
+    got, man = cm.restore_latest({"w": jnp.zeros(4)})
+    assert man["step"] == 2 and float(got["w"][0]) == 2.0
+
+
+def test_checkpoint_leaf_mismatch_raises(tmp_path):
+    save(tmp_path / "ck", {"a": jnp.zeros(2)}, step=1)
+    with pytest.raises(AssertionError):
+        restore(tmp_path / "ck", {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+
+def test_supervisor_restore_and_preempt(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=3)
+    calls = {"n": 0}
+
+    def step_fn(s, b):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            raise NodeFailure("boom")
+        return {"w": s["w"] + 1}
+
+    def batches():
+        while True:
+            yield None
+
+    sup = TrainSupervisor(cm, checkpoint_every=2, max_restores=3)
+    state, rep = sup.run({"w": jnp.zeros(())}, batches(), step_fn,
+                         num_steps=10)
+    assert rep.failures_handled == 1 and rep.restores == 1
+    assert rep.final_step == 10 and float(state["w"]) == 10
+
+    # preemption: checkpoint-and-exit
+    sup2 = TrainSupervisor(CheckpointManager(tmp_path / "p", keep=1),
+                           checkpoint_every=100)
+    sup2.request_preemption()
+    state2, rep2 = sup2.run({"w": jnp.zeros(())}, batches(),
+                            lambda s, b: {"w": s["w"] + 1}, num_steps=10)
+    assert rep2.preempted and rep2.steps_run == 0
+    assert latest_step(tmp_path / "p") == 0
+
+
+# ---------------- compression ----------------
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_quantize_error_bounded_by_half_scale(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    codes, scale = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(codes, scale) - x)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=512),
+                          jnp.float32)}
+    e = init_error_state(g)
+    acc = jnp.zeros(512)
+    for _ in range(64):
+        cg, e = compress_with_feedback(g, e)
+        acc = acc + cg["w"]
+    np.testing.assert_allclose(np.asarray(acc / 64), np.asarray(g["w"]),
+                               atol=2e-3)
+
+
+# ---------------- elastic mesh ----------------
+@given(n=st.integers(1, 4096))
+@settings(max_examples=200, deadline=None)
+def test_largest_mesh_shape_valid(n):
+    d, m = largest_mesh_shape(n, model_axis=16)
+    assert d * m <= n
+    assert d >= 1 and m >= 1
+    assert (d & (d - 1)) == 0                        # power of two
+    if n >= 16:
+        assert m == 16                               # TP degree preserved
+
+
+def test_mesh_shrink_sequence():
+    assert largest_mesh_shape(256) == (16, 16)
+    assert largest_mesh_shape(255) == (8, 16)        # lose a node -> shrink DP
+    assert largest_mesh_shape(8) == (1, 8)           # tiny: shrink TP too

@@ -1,0 +1,134 @@
+"""Executor semantics: retries, failure requeue, straggler speculation, and
+fleet-vs-local observational equivalence."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Castor, ModelDeployment, Schedule
+from repro.core.executor import FleetExecutor, LocalPoolExecutor
+from repro.core.registry import ModelInterface
+from repro.forecast import LinearForecaster
+
+
+class _Flaky(ModelInterface):
+    """Fails the first N attempts per deployment (class-level counter)."""
+    FAILS = {}
+    LOCK = threading.Lock()
+
+    def load(self): pass
+    def transform(self): pass
+
+    def train(self):
+        with _Flaky.LOCK:
+            n = _Flaky.FAILS.get(self.model_id, 0)
+            _Flaky.FAILS[self.model_id] = n + 1
+        if n < 1:
+            raise RuntimeError("transient backend error")
+        return {"ok": True}
+
+    def score(self, m):
+        return np.arange(2.0), np.ones(2)
+
+
+class _Slow(ModelInterface):
+    """One deployment is a straggler (sleeps)."""
+    def load(self): pass
+    def transform(self): pass
+    def train(self): return {}
+    def score(self, m):
+        if self.model_id.endswith("slow"):
+            time.sleep(1.2)
+        return np.arange(2.0), np.ones(2)
+
+
+def _mk_castor(cls, n=4, slow=False):
+    c = Castor()
+    c.publish("pkg", "1.0", cls)
+    c.add_signal("S")
+    for i in range(n):
+        name = f"d{i}" + ("slow" if slow and i == 0 else "")
+        c.add_entity(f"E{i}")
+        c.deploy(ModelDeployment(name=name, package="pkg", signal="S",
+                                 entity=f"E{i}", train=Schedule(0.0, 1e9),
+                                 score=Schedule(0.0, 1e9)))
+    return c
+
+
+def test_retry_on_transient_failure():
+    _Flaky.FAILS = {}
+    c = _mk_castor(_Flaky)
+    res = c.tick(0.0, executor="local")
+    trains = [r for r in res if r.job.task == "train"]
+    assert all(r.ok for r in trains)
+    assert all(r.attempts == 2 for r in trains)      # one retry each
+
+
+def test_permanent_failure_requeues():
+    class _Dead(ModelInterface):
+        def load(self): pass
+        def transform(self): pass
+        def train(self): raise RuntimeError("permanently broken")
+        def score(self, m): return np.arange(2.0), np.ones(2)
+
+    c = _mk_castor(_Dead, n=1)
+    res = c.tick(0.0, executor="local")
+    assert any(not r.ok for r in res)
+    # failed job re-fires next poll (at-least-once)
+    jobs = c.scheduler.poll(1.0)
+    assert any(j.task == "train" for j in jobs)
+
+
+def test_straggler_speculation_does_not_duplicate_results():
+    c = _mk_castor(_Slow, n=6, slow=True)
+    c.tick(0.0, executor="local")                    # trains
+    ex = LocalPoolExecutor(c, max_parallel=6, straggler_min_s=0.2,
+                           straggler_factor=2.0)
+    res = ex.run(c.scheduler.poll(1.0))
+    assert all(r.ok for r in res)
+    # exactly one persisted forecast per deployment despite backup copies
+    for i in range(6):
+        name = f"d{i}" + ("slow" if i == 0 else "")
+        assert len(c.predictions.history(name)) == 1
+
+
+def _smartgrid(n=6):
+    from repro.timeseries.ingest import SiteSpec, build_site
+    c = Castor()
+    build_site(c, SiteSpec("T", n_prosumers=n, n_feeders=2,
+                           n_substations=1, seed=1),
+               t0=0.0, t1=40 * 86400.0)
+    c.publish("lr", "1.0", LinearForecaster)
+    c.deploy_for_all(package="lr", signal="ENERGY_LOAD", name_prefix="m",
+                     kind="PROSUMER", train=Schedule(35 * 86400.0, 1e9),
+                     score=Schedule(35 * 86400.0, 1e9),
+                     user_params={"train_window_days": 14})
+    return c
+
+
+def test_fleet_equals_local_for_linear():
+    """Fleet megabatch and per-job local execution produce the same
+    predictions (observational equivalence)."""
+    ca = _smartgrid()
+    cb = _smartgrid()
+    ra = ca.tick(35 * 86400.0, executor="fleet")
+    rb = cb.tick(35 * 86400.0, executor="local")
+    assert all(r.ok for r in ra) and all(r.ok for r in rb)
+    for i in range(6):
+        fa = ca.predictions.history(f"m-T_PRO_0_{i}")
+        fb = cb.predictions.history(f"m-T_PRO_0_{i}")
+        assert len(fa) == len(fb) == 1
+        np.testing.assert_allclose(fa[0].values, fb[0].values,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fleet_bins_execute_as_one(capsys):
+    c = _smartgrid()
+    ex = FleetExecutor(c)
+    jobs = c.scheduler.poll(35 * 86400.0)
+    res = ex.run(jobs)
+    assert all(r.ok for r in res)
+    # 1 train bin + 1 score bin
+    assert len(ex.last_bin_stats) == 2
+    assert all(b["jobs"] == 6 for b in ex.last_bin_stats)

@@ -1,0 +1,92 @@
+"""Forecast models: fit quality on synthetic signal, fleet==single for the
+closed-form models, recursive scoring shape/finite checks."""
+import numpy as np
+import pytest
+
+from repro.core import Castor, ModelDeployment, Schedule
+from repro.forecast import (ANNForecaster, GAMForecaster, LSTMForecaster,
+                            LinearForecaster)
+from repro.forecast.transform_models import EnergyFromCurrentModel
+from repro.timeseries.ingest import SiteSpec, build_site, ingest_current_feed
+from repro.timeseries.transforms import DAY, HOUR, mape
+
+NOW = 40 * DAY
+
+
+@pytest.fixture(scope="module")
+def castor():
+    c = Castor()
+    build_site(c, SiteSpec("X", n_prosumers=3, n_feeders=1,
+                           n_substations=1, seed=2),
+               t0=0.0, t1=NOW + 2 * DAY)
+    for k, cls in [("lr", LinearForecaster), ("gam", GAMForecaster),
+                   ("ann", ANNForecaster), ("lstm", LSTMForecaster)]:
+        c.publish(k, "1.0", cls)
+    return c
+
+
+def _mape_for(c, pkg, hp=None):
+    dep = ModelDeployment(name=f"t-{pkg}", package=pkg, signal="ENERGY_LOAD",
+                          entity="X_SUB_0", train=Schedule(NOW, 1e12),
+                          score=Schedule(NOW, 1e12),
+                          user_params={"train_window_days": 21, **(hp or {})})
+    c.deploy(dep)
+    res = c.tick(NOW, executor="local", max_parallel=2)
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    fc = c.predictions.history(dep.name)[-1]
+    t, actual = c.read("ENERGY_LOAD", "X_SUB_0", fc.times[0] - 1,
+                       fc.times[-1] + 1)
+    n = min(len(actual), len(fc.values))
+    return mape(actual[:n], fc.values[:n])
+
+
+def test_lr_and_gam_beat_naive(castor):
+    m_lr = _mape_for(castor, "lr")
+    m_gam = _mape_for(castor, "gam")
+    assert m_lr < 15.0, m_lr
+    assert m_gam < 15.0, m_gam
+
+
+def test_ann_trains_reasonably(castor):
+    m = _mape_for(castor, "ann", {"epochs": 80, "hidden": 16,
+                                  "target_lags": 24})
+    assert np.isfinite(m) and m < 30.0, m
+
+
+def test_lstm_trains_reasonably(castor):
+    # LSTM is the paper's weakest model too (6.37% vs 2.76-3.92% at full
+    # scale); at CPU-test width/epochs we only gate on sanity.
+    m = _mape_for(castor, "lstm", {"epochs": 200, "hidden": 16})
+    assert np.isfinite(m) and m < 40.0, m
+
+
+def test_fleet_train_matches_single_for_lr(castor):
+    insts = []
+    for e in ["X_PRO_0_0", "X_PRO_0_1"]:
+        ctx = castor.graph.context("ENERGY_LOAD", e)
+        insts.append(LinearForecaster(
+            context=ctx, task="train", model_id=f"f-{e}", model_version=None,
+            user_params={"train_window_days": 14, "now": NOW}, system=castor))
+    fleet = LinearForecaster.fleet_train(insts)
+    for inst, fm in zip(insts, fleet):
+        single = inst.train()
+        np.testing.assert_allclose(fm["params"]["theta"],
+                                   single["params"]["theta"],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_transform_model_energy_from_current(castor):
+    ingest_current_feed(castor, "X_SUB_0", t0=NOW - 2 * DAY, t1=NOW, seed=9)
+    castor.publish("xform", "1.0", EnergyFromCurrentModel)
+    castor.add_signal("ENERGY_LOAD_DERIVED")
+    castor.deploy(ModelDeployment(
+        name="xf", package="xform", signal="ENERGY_LOAD_DERIVED",
+        entity="X_SUB_0", train=Schedule(NOW, 1e12), score=Schedule(NOW, 1e12),
+        user_params={"window_days": 2}))
+    res = [r for r in castor.tick(NOW + 1, executor="local")
+           if r.job.deployment_name == "xf"]
+    assert all(r.ok for r in res), [r.error for r in res]
+    fc = castor.predictions.history("xf")[-1]
+    assert fc.values.size > 0 and np.all(fc.values >= 0)
+    # 15-minute grid
+    assert np.allclose(np.diff(fc.times), 900.0)

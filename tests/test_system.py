@@ -1,0 +1,83 @@
+"""End-to-end behaviour of the full Castor workflow (paper Fig. 1):
+ingest -> semantics -> publish -> programmatic deploy -> schedule ->
+fleet-execute -> lineage -> semantic retrieval with ranking."""
+import numpy as np
+
+from repro.core import Castor, ModelDeployment, Schedule, DAY, HOUR
+from repro.forecast import GAMForecaster, LinearForecaster
+from repro.timeseries.ingest import SiteSpec, build_site
+from repro.timeseries.transforms import mape
+
+
+def test_full_workflow():
+    c = Castor()
+    site = build_site(c, SiteSpec("CY", n_prosumers=4, n_feeders=2,
+                                  n_substations=1, seed=5),
+                      t0=0.0, t1=50 * DAY)
+    assert site["readings"] > 0
+    now = 45 * DAY
+
+    c.publish("castor-lr", "1.0", LinearForecaster)
+    c.publish("castor-gam", "1.0", GAMForecaster)
+
+    # programmatic fleet deployment from a semantic rule
+    deps = c.deploy_for_all(package="castor-lr", signal="ENERGY_LOAD",
+                            name_prefix="lr", kind="PROSUMER",
+                            train=Schedule(now, 7 * DAY),
+                            score=Schedule(now, HOUR),
+                            user_params={"train_window_days": 14})
+    assert len(deps) == 4
+
+    # two ranked models on the substation
+    for rank, pkg in [(0, "castor-gam"), (1, "castor-lr")]:
+        c.deploy(ModelDeployment(
+            name=f"{pkg}-sub", package=pkg, signal="ENERGY_LOAD",
+            entity="CY_SUB_0", train=Schedule(now, 7 * DAY),
+            score=Schedule(now, HOUR),
+            user_params={"train_window_days": 14}, rank=rank))
+
+    r1 = c.tick(now, executor="fleet")
+    assert len(r1) == 12 and all(r.ok for r in r1)   # 6 trains + 6 scores
+    r2 = c.tick(now + HOUR, executor="fleet")
+    assert len(r2) == 6 and all(r.ok for r in r2)    # scores only
+
+    # rolling-horizon lineage: two forecasts per deployment, none overwritten
+    assert len(c.predictions.history("castor-gam-sub")) == 2
+
+    # ranked retrieval by semantics only
+    best = c.best_forecast("ENERGY_LOAD", "CY_SUB_0")
+    assert best.deployment_name == "castor-gam-sub"
+
+    # forecasts are usable: MAPE sane vs actuals
+    t, actual = c.read("ENERGY_LOAD", "CY_SUB_0", best.times[0] - 1,
+                       best.times[-1] + 1)
+    n = min(len(actual), len(best.values))
+    assert mape(actual[:n], best.values[:n]) < 25.0
+
+    # model versions persisted with metadata
+    mv = c.versions.get("castor-gam-sub")
+    assert mv is not None and mv.version == 1
+
+    # Fig. 7 multi-horizon view exists for an overlapping target hour
+    target = float(best.times[0])
+    hz = c.predictions.horizons("castor-gam-sub", target)
+    assert len(hz) >= 2
+
+
+def test_growth_auto_deploy():
+    """The application grows as sensors are added (paper §3.2)."""
+    c = Castor()
+    build_site(c, SiteSpec("G", n_prosumers=2, n_feeders=1,
+                           n_substations=1, seed=1), t0=0.0, t1=30 * DAY)
+    c.publish("lr", "1.0", LinearForecaster)
+    first = c.deploy_for_all(package="lr", signal="ENERGY_LOAD",
+                             name_prefix="a", kind="PROSUMER",
+                             score=Schedule(0.0, HOUR))
+    # new sensor arrives later
+    c.add_entity("G_PRO_NEW", "PROSUMER", parent="G_FD_0_0")
+    c.ingest("raw::new", np.arange(0, 10) * 3600.0, np.ones(10))
+    c.link("raw::new", "ENERGY_LOAD", "G_PRO_NEW")
+    second = c.deploy_for_all(package="lr", signal="ENERGY_LOAD",
+                              name_prefix="b", kind="PROSUMER",
+                              score=Schedule(0.0, HOUR))
+    assert len(second) == len(first) + 1

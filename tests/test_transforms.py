@@ -1,0 +1,105 @@
+"""Property tests (hypothesis) for the time-series substrate invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.timeseries.store import TimeSeriesStore
+from repro.timeseries.transforms import (HOUR, align_resample,
+                                         calendar_features,
+                                         integrate_to_energy, lagged_features,
+                                         mape)
+
+
+# ---------------- store ----------------
+@given(st.lists(st.lists(st.tuples(st.floats(0, 1e6), st.floats(-1e3, 1e3)),
+                         min_size=1, max_size=20), min_size=1, max_size=5))
+@settings(max_examples=50, deadline=None)
+def test_store_append_only_sorted_reads(batches):
+    s = TimeSeriesStore()
+    total = 0
+    for b in batches:
+        t = [x[0] for x in b]
+        v = [x[1] for x in b]
+        total += s.append("x", t, v)
+    rt, rv = s.read("x")
+    assert rt.size == total == s.length("x")        # nothing lost/overwritten
+    assert np.all(np.diff(rt) >= 0)                 # time-sorted view
+
+
+def test_store_range_reads():
+    s = TimeSeriesStore()
+    s.append("x", [3.0, 1.0, 2.0], [30, 10, 20])
+    t, v = s.read("x", 1.5, 3.0)                    # [start, end)
+    assert list(t) == [2.0] and list(v) == [20]
+
+
+def test_store_roundtrip(tmp_path):
+    s = TimeSeriesStore()
+    s.append("a", [1, 2], [3, 4])
+    s.append("b::x", [0.5], [9])
+    s.save(str(tmp_path))
+    s2 = TimeSeriesStore.load(str(tmp_path))
+    t, v = s2.read("a")
+    assert list(v) == [3, 4] and set(s2.ids()) == {"a", "b::x"}
+
+
+# ---------------- resample ----------------
+@given(n=st.integers(2, 200), step=st.floats(1.0, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_align_resample_sum_conserves_mass(n, step):
+    rng = np.random.default_rng(n)
+    t = np.sort(rng.uniform(0, 1000, n))
+    v = rng.normal(size=n)
+    grid, out = align_resample(t, v, step=step, how="sum")
+    assert np.isclose(out.sum(), v.sum(), atol=1e-6 * max(1, abs(v).sum()))
+    assert np.all(np.diff(grid) > 0)
+
+
+def test_align_resample_mean_and_ffill():
+    t = np.asarray([0.0, 1.0, 10.0])
+    v = np.asarray([2.0, 4.0, 8.0])
+    grid, out = align_resample(t, v, step=5.0, start=0.0, end=15.0)
+    assert out[0] == 3.0                            # mean of bin
+    assert out[1] == 3.0                            # forward-filled gap
+    assert out[2] == 8.0
+
+
+# ---------------- integration (Fig. 4) ----------------
+def test_integrate_constant_current_exact():
+    """Constant current I at voltage V for T hours = V*I*T/1000 kWh."""
+    t = np.arange(0, 3600 * 4 + 1, 60.0)            # 4 hours at 1-min
+    i = np.full_like(t, 10.0)                       # 10 A
+    grid, e = integrate_to_energy(t, i, voltage=230.0, step=900.0)
+    np.testing.assert_allclose(e.sum(), 230.0 * 10.0 * 4.0 / 1000.0, rtol=1e-6)
+    # each 15-min bin carries V*I*0.25h/1000
+    np.testing.assert_allclose(e[1:-1], 230 * 10 * 0.25 / 1000, rtol=1e-6)
+
+
+@given(n=st.integers(10, 300))
+@settings(max_examples=30, deadline=None)
+def test_integration_invariant_total_energy(n):
+    rng = np.random.default_rng(n)
+    t = np.sort(rng.uniform(0, 36000, n))
+    i = rng.uniform(0, 20, n)
+    grid, e = integrate_to_energy(t, i, step=900.0)
+    # total energy equals the full trapezoid integral
+    p = 230.0 * i / 1000.0
+    want = np.trapezoid(p, t / 3600.0)
+    np.testing.assert_allclose(e.sum(), want, rtol=1e-6, atol=1e-9)
+
+
+# ---------------- features ----------------
+def test_lagged_features_alignment():
+    s = np.arange(10.0)
+    X = lagged_features(s, [1, 3])
+    assert X[5, 0] == 4.0 and X[5, 1] == 2.0
+
+
+def test_calendar_features_periodic():
+    f1 = calendar_features(np.asarray([0.0]))
+    f2 = calendar_features(np.asarray([7 * 24 * HOUR]))
+    np.testing.assert_allclose(f1, f2, atol=1e-9)
+
+
+def test_mape_basic():
+    assert mape([100, 100], [90, 110]) == pytest.approx(10.0)
