@@ -84,12 +84,27 @@ class Castor:
         ctx = self.graph.context(signal, entity)
         return self.store.read(ctx.ts_id, start, end)
 
+    def read_many(self, pairs, start=None, end=None):
+        """Batched semantic reads: ``pairs`` is [(signal, entity), ...];
+        all series are fetched in ONE ``store.read_many`` round-trip."""
+        ids = [self.graph.context(s, e).ts_id for s, e in pairs]
+        return self.store.read_many(ids, start, end)
+
+    def compact(self):
+        """Consolidate every series to one sorted segment (post-bulk-ingest
+        hook so the next fleet read is a pure binary-search slice)."""
+        self.store.compact()
+
     def best_forecast(self, signal: str, entity: str, at: Optional[float] = None):
         return self.predictions.latest(signal, entity, at)
 
     def stats(self) -> dict:
+        st = self.store.stats()
         return {**self.graph.stats(),
-                "points": self.store.total_points(),
+                "points": st["points"],
+                "segments": st["segments"],
+                "store_reads": st["reads"],
+                "store_read_many": st["read_many"],
                 "deployments": len(self.deployments),
                 "model_versions": self.versions.count(),
                 "forecasts": self.predictions.count()}

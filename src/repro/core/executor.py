@@ -14,8 +14,20 @@ Two interchangeable executors:
   ``fleet_score`` hooks (vmapped JAX under the hood). Implementations without
   fleet hooks fall back to the pool.
 
-Both return per-job ``JobResult``s and persist model versions / predictions
-identically, so the two paths are observationally equivalent up to speed.
+Data path: a fleet bin fetches ALL of its series history with a single
+``store.read_many`` call (via ``ForecastModelBase.fleet_load``) against the
+compacting columnar ``TimeSeriesStore``, instead of N per-instance
+``read()``s; ``last_bin_stats`` records the observed ``read_many_calls`` /
+``single_reads`` per bin so tests and benchmarks can assert the batching.
+
+Observational-equivalence guarantee: for the same due jobs, the two
+executors persist the same model versions and forecasts (up to per-model
+training stochasticity with identical seeds) — ``fleet_load`` sets each
+instance's ``_loaded`` to exactly what ``load()`` computes, the batched
+store read returns the same points as N single reads, and both paths write
+through the same ``ModelVersionStore`` / ``PredictionStore``. Choosing an
+executor changes speed, never results. ``tests/test_executor.py`` and
+``tests/test_store.py`` pin this contract.
 """
 from __future__ import annotations
 
@@ -181,6 +193,9 @@ class FleetExecutor(_ExecBase):
                 out.extend(self.fallback.run(bin_jobs_))
                 continue
             t0 = time.perf_counter()
+            store = getattr(self.system, "store", None)
+            rm0 = getattr(store, "read_many_count", 0)
+            r0 = getattr(store, "read_count", 0)
             instances = [self._instantiate(j) for j in bin_jobs_]
             try:
                 if key[2] == "train":
@@ -210,7 +225,10 @@ class FleetExecutor(_ExecBase):
                 per = dt / max(len(bin_jobs_), 1)
                 out.extend(JobResult(j, True, per) for j in bin_jobs_)
                 self.last_bin_stats.append(
-                    {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt})
+                    {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt,
+                     "read_many_calls":
+                         getattr(store, "read_many_count", 0) - rm0,
+                     "single_reads": getattr(store, "read_count", 0) - r0})
             except Exception as e:  # noqa: BLE001
                 dt = time.perf_counter() - t0
                 err = f"{type(e).__name__}: {e}"

@@ -16,7 +16,7 @@ import numpy as np
 
 from ..core.registry import ModelInterface
 from ..timeseries.transforms import DAY, HOUR
-from .features import (FeatureSpec, design_matrix, hourly_series,
+from .features import (FeatureSpec, design_matrix, fleet_hourly_series,
                        recursive_forecast)
 
 
@@ -25,17 +25,9 @@ class ForecastModelBase(ModelInterface):
 
     # ------------- paper 4-function workflow -------------
     def load(self):
-        up = {**self.DEFAULTS, **self.user_params}
-        spec = FeatureSpec.from_params(up)
-        now = float(up.get("now", self.user_params.get("now", 0.0)))
-        t1 = now
-        t0 = t1 - float(up["train_window_days"]) * DAY
-        ctx = self.context
-        times, target = hourly_series(self.system, ctx, t0, t1, spec.step)
-        ent = ctx.entity
-        temps = self.system.weather.forecast(ent.lat, ent.lon, t0, times) \
-            if spec.use_weather else np.zeros_like(times)
-        self._loaded = (spec, times, target, temps, now)
+        """Single-instance case of ``fleet_load``: one shared pipeline is
+        what makes LocalPool and Fleet execution structurally equivalent."""
+        self.fleet_load([self])
         return self._loaded
 
     def transform(self):
@@ -75,10 +67,55 @@ class ForecastModelBase(ModelInterface):
 
     # ------------- fleet plumbing (stacked across instances) -------------
     @classmethod
+    def fleet_load(cls, instances: List[ModelInterface]) -> None:
+        """Batched ``load()`` for a fleet bin: ONE ``store.read_many`` per
+        shared (window, step) group instead of one ``read()`` per instance.
+
+        Jobs in a bin share user_params and ``now``, so normally this is a
+        single group — the whole bin's history arrives in one store call.
+        Sets each instance's ``_loaded`` to exactly what ``load()`` would,
+        keeping LocalPool and Fleet observationally equivalent.
+        """
+        groups: dict = {}
+        for inst in instances:
+            up = {**cls.DEFAULTS, **inst.user_params}
+            spec = FeatureSpec.from_params(up)
+            now = float(up.get("now", 0.0))
+            t0 = now - float(up["train_window_days"]) * DAY
+            groups.setdefault((t0, now, spec.step), []).append(
+                (inst, spec, now))
+        for (t0, t1, step), members in groups.items():
+            ctxs = [m[0].context for m in members]
+            grid, targets = fleet_hourly_series(
+                members[0][0].system, ctxs, t0, t1, step)
+            for (inst, spec, now), target in zip(members, targets):
+                ent = inst.context.entity
+                temps = inst.system.weather.forecast(
+                    ent.lat, ent.lon, t0, grid) if spec.use_weather \
+                    else np.zeros_like(grid)
+                inst._loaded = (spec, grid, target, temps, now)
+
+    @classmethod
+    def _require_one_window(cls, instances) -> None:
+        """Batched *scoring* rolls one recursive forecast with a single
+        shared time axis, so a bin mixing execution times ('now') would
+        silently compute wrong calendar features for all but the first
+        instance — fail loudly instead. Training is per-instance after
+        stacking and tolerates mixed windows, so only fleet_score guards.
+        (Scheduler polls stamp every job in a cycle with the same time, so
+        this only trips when jobs from different polls are mixed into one
+        run.)"""
+        nows = {inst._loaded[4] for inst in instances}
+        if len(nows) > 1:
+            raise RuntimeError(
+                f"fleet bin mixes execution times {sorted(nows)[:3]}...; "
+                "run each poll's jobs separately")
+
+    @classmethod
     def _fleet_xy(cls, instances) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        cls.fleet_load(instances)
         Xs, ys, mus, sds = [], [], [], []
         for inst in instances:
-            inst.load()
             X, y, mu, sd = inst.transform()
             Xs.append(X), ys.append(y), mus.append(mu), sds.append(sd)
         return (np.stack(Xs), np.stack(ys), np.stack(mus), np.stack(sds))
@@ -97,11 +134,12 @@ class ForecastModelBase(ModelInterface):
 
     @classmethod
     def fleet_score(cls, instances: List[ModelInterface], model_objects):
+        cls.fleet_load(instances)
+        cls._require_one_window(instances)
         spec = None
         y_hists, temp_hists, temps_futs, fut_ts = [], [], [], []
         H = None
         for inst in instances:
-            inst.load()
             spec, times, target, temps, now = inst._loaded
             up = {**cls.DEFAULTS, **inst.user_params}
             H = int(up["horizon"])

@@ -10,7 +10,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from ..timeseries.transforms import (HOUR, align_resample, calendar_features,
-                                     lagged_features)
+                                     lagged_features, regular_grid)
 
 
 @dataclass(frozen=True)
@@ -39,9 +39,36 @@ class FeatureSpec:
                    step=float(up.get("frequency", HOUR)))
 
 
+def fleet_hourly_series(system, ctxs, t0: float, t1: float,
+                        step: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched series loading: ONE ``store.read_many`` for a whole fleet
+    bin, then per-series alignment onto the shared ``[t0, t1)`` grid.
+
+    Returns ``(grid (T,), targets (N, T))``; rows align 1:1 with ``ctxs``.
+
+    Missing-data policy (deliberate, see docs/ARCHITECTURE.md): a window
+    with NO points yields an all-zero row, so the job succeeds with flat
+    forecasts in both executors instead of crashing — one dead sensor
+    must not poison a megabatched bin, and LocalPool must agree with
+    Fleet. ``hourly_series`` is the single-context case of this function,
+    so the solo and fleet paths cannot drift apart.
+    """
+    raw = system.store.read_many([c.ts_id for c in ctxs],
+                                 t0 - step, t1 + step)
+    grid = regular_grid(t0, t1, step)   # same binning rule as align_resample
+    rows = []
+    for t, v in raw:
+        if t.size == 0:
+            rows.append(np.zeros_like(grid))
+            continue
+        _, r = align_resample(t, v, step=step, start=t0, end=t1)
+        rows.append(r)
+    return grid, np.stack(rows) if rows else np.zeros((0, grid.size))
+
+
 def hourly_series(system, ctx, t0: float, t1: float, step: float) -> Tuple[np.ndarray, np.ndarray]:
-    t, v = system.store.read(ctx.ts_id, t0 - step, t1 + step)
-    return align_resample(t, v, step=step, start=t0, end=t1)
+    grid, targets = fleet_hourly_series(system, [ctx], t0, t1, step)
+    return grid, targets[0]
 
 
 def design_matrix(spec: FeatureSpec, times, target, temps) -> Tuple[np.ndarray, np.ndarray]:

@@ -77,7 +77,11 @@ def build_site(castor, spec: SiteSpec, *, t0: float, t1: float,
         total += castor.ingest(ts_id, times, agg)
         castor.link(ts_id, "ENERGY_LOAD", sub.name)
         contexts.append(("ENERGY_LOAD", sub.name))
-    return {"contexts": contexts, "readings": total}
+    # bulk ingest done: consolidate so the first fleet read_many is a pure
+    # binary-search slice (one sorted segment per series)
+    castor.compact()
+    seg = castor.store.stats()["segments"]      # store-wide, hence the key
+    return {"contexts": contexts, "readings": total, "store_segments": seg}
 
 
 def ingest_current_feed(castor, entity: str, *, t0: float, t1: float,

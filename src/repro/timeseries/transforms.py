@@ -13,6 +13,14 @@ HOUR = 3600.0
 DAY = 24 * HOUR
 
 
+def regular_grid(start: float, end: float, step: float) -> np.ndarray:
+    """THE binning rule for [start, end) grids — single source of truth for
+    ``align_resample`` and the fleet feature path, so per-series rows and
+    the shared fleet grid can never disagree on length."""
+    nbins = max(int(round((end - start) / step)), 1)
+    return start + step * np.arange(nbins)
+
+
 def align_resample(times, values, *, step: float, start: Optional[float] = None,
                    end: Optional[float] = None, how: str = "mean") -> Tuple[np.ndarray, np.ndarray]:
     """Aggregate an irregular series onto a regular grid [start, end) with
@@ -23,7 +31,8 @@ def align_resample(times, values, *, step: float, start: Optional[float] = None,
         return np.empty(0), np.empty(0)
     start = float(t.min() // step * step) if start is None else start
     end = float(t.max() // step * step + step) if end is None else end
-    nbins = max(int(round((end - start) / step)), 1)
+    grid = regular_grid(start, end, step)
+    nbins = grid.size
     idx = np.floor((t - start) / step).astype(np.int64)
     ok = (idx >= 0) & (idx < nbins)
     idx, vv = idx[ok], v[ok]
@@ -42,7 +51,6 @@ def align_resample(times, values, *, step: float, start: Optional[float] = None,
             out = np.where(ffidx >= 0, out[np.maximum(ffidx, 0)], 0.0)
         else:
             out = np.zeros(nbins)
-    grid = start + step * np.arange(nbins)
     return grid, out
 
 

@@ -1,0 +1,130 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The container image does not always ship ``hypothesis``; hard-importing it
+made ``pytest`` fail at collection. Property tests import from this module
+instead::
+
+    from _hypothesis_compat import given, settings, st
+
+When ``hypothesis`` is available it is re-exported untouched. Otherwise a
+tiny deterministic engine runs each property over a seeded example grid:
+boundary cases first (min/max of each scalar strategy), then samples from
+``numpy.random.default_rng`` seeded by the test name — every run explores
+the identical examples, so failures reproduce exactly.
+
+Only the strategy surface this repo uses is implemented: ``floats``,
+``integers``, ``lists``, ``tuples`` (plus kwargs like ``allow_nan``, which
+the bounded fallbacks never generate anyway).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 25          # cap: determinism matters, volume doesn't
+
+    class _Strategy:
+        def sample(self, rng, boundary=None):
+            raise NotImplementedError
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+            self.lo = float(min_value)
+            self.hi = float(max_value)
+
+        def sample(self, rng, boundary=None):
+            if boundary == 0:
+                return self.lo
+            if boundary == 1:
+                return self.hi
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=1, **_kw):
+            self.lo = int(min_value)
+            self.hi = int(max_value)
+
+        def sample(self, rng, boundary=None):
+            if boundary == 0:
+                return self.lo
+            if boundary == 1:
+                return self.hi
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10, **_kw):
+            self.elements = elements
+            self.min_size = int(min_size)
+            self.max_size = int(max_size)
+
+        def sample(self, rng, boundary=None):
+            if boundary == 0:
+                size = self.min_size
+            elif boundary == 1:
+                size = self.max_size
+            else:
+                size = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elements.sample(rng) for _ in range(size)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elements):
+            self.elements = elements
+
+        def sample(self, rng, boundary=None):
+            return tuple(e.sample(rng) for e in self.elements)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **kw):
+            return _Floats(min_value, max_value, **kw)
+
+        @staticmethod
+        def integers(min_value=0, max_value=1, **kw):
+            return _Integers(min_value, max_value, **kw)
+
+        @staticmethod
+        def lists(elements, **kw):
+            return _Lists(elements, **kw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Tuples(*elements)
+
+    def settings(*, max_examples=_DEFAULT_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._max_examples = min(int(max_examples), _DEFAULT_EXAMPLES)
+            return fn
+        return deco
+
+    def given(*pos_strats, **kw_strats):
+        def deco(fn):
+            n = getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+
+            def wrapper():
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode()))
+                for i in range(n):
+                    boundary = i if i < 2 else None
+                    args = [s.sample(rng, boundary) for s in pos_strats]
+                    kwargs = {k: s.sample(rng, boundary)
+                              for k, s in kw_strats.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except Exception:
+                        print(f"falsifying example ({fn.__name__}, "
+                              f"case {i}): args={args!r} kwargs={kwargs!r}")
+                        raise
+                return None
+            # NOT functools.wraps: pytest would introspect the wrapped
+            # signature and demand fixtures for the strategy parameters
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

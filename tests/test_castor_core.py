@@ -2,7 +2,7 @@
 graph, deployments, lineage."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Castor, ModelDeployment, Schedule
 from repro.core.registry import ModelInterface, ModelRegistry

@@ -1,7 +1,7 @@
 """Property tests (hypothesis) for the time-series substrate invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.timeseries.store import TimeSeriesStore
 from repro.timeseries.transforms import (HOUR, align_resample,
