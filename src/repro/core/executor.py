@@ -68,7 +68,10 @@ class _ExecBase:
         dep = self.system.deployments.get(job.deployment_name)
         latest = self.system.versions.get(job.deployment_name)
         up = dict(dep.user_params)
-        up.setdefault("now", job.scheduled_at)   # execution-time parameter
+        # execution-time parameter: the poll's timestamp must ALWAYS win —
+        # a stray "now" in a deployment's user_params would otherwise pin
+        # every future job to that stale instant
+        up["now"] = job.scheduled_at
         return cls(context=ctx, task=job.task, model_id=job.deployment_name,
                    model_version=latest.version if latest else None,
                    user_params=up, system=self.system)
@@ -140,9 +143,11 @@ class LocalPoolExecutor(_ExecBase):
         with ThreadPoolExecutor(max_workers=self.max_parallel) as pool:
             pending: Dict[Future, Tuple[Job, int, int, float]] = {}
             backups: Dict[int, Future] = {}
+            inflight: Dict[int, int] = {}    # job idx -> live copies
             for i, job in enumerate(jobs):
                 f = pool.submit(attempt, job, i, 1)
                 pending[f] = (job, i, 1, time.perf_counter())
+                inflight[i] = 1
 
             while pending:
                 done, _ = wait(list(pending), timeout=self.straggler_min_s,
@@ -150,6 +155,7 @@ class LocalPoolExecutor(_ExecBase):
                 now = time.perf_counter()
                 for f in done:
                     job, idx, n, t0 = pending.pop(f)
+                    inflight[idx] -= 1
                     res = f.result()
                     if idx in results:      # a copy already finished
                         continue
@@ -161,7 +167,12 @@ class LocalPoolExecutor(_ExecBase):
                     elif n <= self.max_retries:
                         nf = pool.submit(attempt, job, idx, n + 1)
                         pending[nf] = (job, idx, n + 1, now)
-                    else:
+                        inflight[idx] += 1
+                    elif inflight[idx] == 0:
+                        # a job fails only once NO copy of it remains in
+                        # flight — a backup that dies must not discard a
+                        # still-running primary's success (which would
+                        # wrongly re-fire the job next poll)
                         results[idx] = res
                         self.system.scheduler.mark_failed(job)
                 # speculative re-dispatch of stragglers (MapReduce-style)
@@ -173,6 +184,7 @@ class LocalPoolExecutor(_ExecBase):
                             bf = pool.submit(attempt, job, idx, n + 1)
                             backups[idx] = bf
                             pending[bf] = (job, idx, n + 1, now)
+                            inflight[idx] += 1
         return [results[i] for i in sorted(results)]
 
 

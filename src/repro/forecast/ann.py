@@ -95,23 +95,31 @@ class ANNForecaster(ForecastModelBase):
         params = _fit_jax(key, jnp.asarray(X, jnp.float32),
                           jnp.asarray(y, jnp.float32), ys,
                           epochs=epochs, width=width, lr=lr)
-        return {"w": [np.asarray(w) for w in params["w"]],
-                "b": [np.asarray(b) for b in params["b"]],
-                "y_scale": ys}
+        # flat w0../b0.. layout, SAME as _fleet_fit: a version trained by
+        # either executor must be scorable by either scoring path
+        out = {f"w{i}": np.asarray(w) for i, w in enumerate(params["w"])}
+        out.update({f"b{i}": np.asarray(b)
+                    for i, b in enumerate(params["b"])})
+        out["y_scale"] = ys
+        return out
 
     def _predict(self, params, X):
-        p = {"w": [jnp.asarray(w) for w in params["w"]],
-             "b": [jnp.asarray(b) for b in params["b"]]}
+        nl = N_HIDDEN_LAYERS + 1
+        p = {"w": [jnp.asarray(params[f"w{i}"]) for i in range(nl)],
+             "b": [jnp.asarray(params[f"b{i}"]) for i in range(nl)]}
         return np.asarray(_mlp_out(p, jnp.asarray(X, jnp.float32),
                                    params["y_scale"]))
 
     # ------------- fleet hooks -------------
     @classmethod
-    def _fleet_fit(cls, X, y, rng):
+    def _fleet_fit(cls, X, y, rng, up):
+        # bin-shared user_params, NOT redeclared defaults: a deployment with
+        # hidden=128 must fleet-train the same width LocalPool would
+        width = int(up["hidden"])
+        epochs, lr = int(up["epochs"]), float(up["lr"])
         N = X.shape[0]
         keys = jax.random.split(jax.random.PRNGKey(int(rng.integers(2**31))), N)
         ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
-        width, epochs, lr = 64, 300, 1e-3
         params = _fit_fleet(keys, jnp.asarray(X, jnp.float32),
                             jnp.asarray(y, jnp.float32),
                             jnp.asarray(ys, jnp.float32), epochs, width, lr)
@@ -124,12 +132,20 @@ class ANNForecaster(ForecastModelBase):
 
     @classmethod
     def _fleet_predict(cls, stacked, X):
-        nl = N_HIDDEN_LAYERS + 1
-        ws = [jnp.asarray(stacked[f"w{i}"]) for i in range(nl)]
-        bs = [jnp.asarray(stacked[f"b{i}"]) for i in range(nl)]
-        raw = fleet_mlp(jnp.asarray(X, jnp.float32)[:, None, :], ws, bs)
-        y = jax.nn.sigmoid(raw[:, 0, 0]) * jnp.asarray(stacked["y_scale"])
+        y = cls._fleet_predict_traced(stacked, jnp.asarray(X, jnp.float32))
         return np.asarray(y)
 
-    def fleet_hp_key(self):
-        return self._hp()
+    @classmethod
+    def _fleet_predict_traced(cls, stacked, x):
+        """One megabatched fleet_mlp launch: per-instance weight stacks with
+        a real leading batch dimension (the Pallas kernel's grid axis)."""
+        nl = N_HIDDEN_LAYERS + 1
+        ws = [jnp.asarray(stacked[f"w{i}"], jnp.float32) for i in range(nl)]
+        bs = [jnp.asarray(stacked[f"b{i}"], jnp.float32) for i in range(nl)]
+        raw = fleet_mlp(x[:, None, :], ws, bs)
+        return jax.nn.sigmoid(raw[:, 0, 0]) \
+            * jnp.asarray(stacked["y_scale"], jnp.float32)
+
+    @classmethod
+    def _device_predict_factory(cls, spec, statics):
+        return cls._fleet_predict_traced

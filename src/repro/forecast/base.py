@@ -10,14 +10,19 @@ weather_lags, plus model-specific extras (hidden, epochs, lr, ...).
 """
 from __future__ import annotations
 
-from typing import Any, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.registry import ModelInterface
-from ..timeseries.transforms import DAY, HOUR
+from ..timeseries.transforms import DAY, HOUR, calendar_phases
 from .features import (FeatureSpec, design_matrix, fleet_hourly_series,
-                       recursive_forecast)
+                       make_device_rollout, recursive_forecast)
+
+#: compiled whole-horizon rollouts, keyed by
+#: (model class, FeatureSpec, horizon, class-specific statics) — one trace
+#: per configuration, reused across every score bin of that shape.
+_ROLLOUT_CACHE: Dict[tuple, Callable] = {}
 
 
 class ForecastModelBase(ModelInterface):
@@ -124,7 +129,11 @@ class ForecastModelBase(ModelInterface):
     def fleet_train(cls, instances: List[ModelInterface]):
         X, y, mu, sd = cls._fleet_xy(instances)
         rng = np.random.default_rng(12345)
-        params = cls._fleet_fit(X, y, rng)              # stacked params
+        # jobs in a bin share user_params_key, so the first instance's
+        # merged params speak for the whole bin (hardcoding defaults here
+        # is the fleet/local divergence bug this signature prevents)
+        up = {**cls.DEFAULTS, **instances[0].user_params}
+        params = cls._fleet_fit(X, y, rng, up)          # stacked params
         out = []
         for i, inst in enumerate(instances):
             pi = {k: np.asarray(v[i]) for k, v in params.items()}
@@ -136,13 +145,13 @@ class ForecastModelBase(ModelInterface):
     def fleet_score(cls, instances: List[ModelInterface], model_objects):
         cls.fleet_load(instances)
         cls._require_one_window(instances)
+        # jobs in a bin share user_params_key: one merge speaks for all
+        up = {**cls.DEFAULTS, **instances[0].user_params}
+        H = int(up["horizon"])
         spec = None
         y_hists, temp_hists, temps_futs, fut_ts = [], [], [], []
-        H = None
         for inst in instances:
             spec, times, target, temps, now = inst._loaded
-            up = {**cls.DEFAULTS, **inst.user_params}
-            H = int(up["horizon"])
             warm = max(spec.target_lags, spec.weather_lags) + 1
             ent = inst.context.entity
             fut_t = now + spec.step * np.arange(0, H)
@@ -154,12 +163,66 @@ class ForecastModelBase(ModelInterface):
         sd = np.stack([m["sd"] for m in model_objects])
         stacked = {k: np.stack([m["params"][k] for m in model_objects])
                    for k in model_objects[0]["params"]}
-
-        def predict(x):                                  # x: (N, F)
-            return cls._fleet_predict(stacked, (x - mu) / sd)
-
         t_start = fut_ts[0][0]
-        vals = recursive_forecast(predict, spec, np.stack(y_hists),
-                                  np.stack(temp_hists), np.stack(temps_futs),
-                                  t_start, H)
+        y_hist = np.stack(y_hists)
+        temp_hist = np.stack(temp_hists)
+        temps_fut = np.stack(temps_futs)
+
+        vals = None
+        if up.get("rollout", "device") != "host":
+            vals = cls._device_rollout(spec, up, stacked, mu, sd, y_hist,
+                                       temp_hist, temps_fut, t_start, H)
+        if vals is None:                 # reference path / no device hook
+            def predict(x):                              # x: (N, F)
+                return cls._fleet_predict(stacked, (x - mu) / sd)
+
+            vals = recursive_forecast(predict, spec, y_hist, temp_hist,
+                                      temps_fut, t_start, H)
         return [(fut_ts[i], vals[i]) for i in range(len(instances))]
+
+    # ------------- device-resident scoring rollout -------------
+    @classmethod
+    def _rollout_statics(cls, up: dict, stacked: dict) -> tuple:
+        """Hashable per-class trace statics derived from the bin's shared
+        user_params / stacked model params (e.g. GAM's spline column
+        indices). Part of the compiled-rollout cache key."""
+        return ()
+
+    @classmethod
+    def _device_predict_factory(cls, spec: FeatureSpec,
+                                statics: tuple) -> Optional[Callable]:
+        """Return a traceable ``(stacked_params, x) -> (N,)`` one-step
+        predictor, or None to keep scoring on the numpy reference path
+        (``recursive_forecast``)."""
+        return None
+
+    @classmethod
+    def _device_rollout(cls, spec: FeatureSpec, up: dict, stacked, mu, sd,
+                        y_hist, temp_hist, temps_future, t_start: float,
+                        H: int) -> Optional[np.ndarray]:
+        """Score a whole bin with ONE device program (jitted lax.scan over
+        the horizon) instead of H host-loop steps. Returns None when the
+        model has no traceable predictor — callers then fall back to the
+        numpy reference path, preserving the executor equivalence
+        contract for models that cannot run device-resident."""
+        statics = cls._rollout_statics(up, stacked)
+        key = (cls, spec, H, statics)
+        fn = _ROLLOUT_CACHE.get(key)
+        if fn is None:
+            predict = cls._device_predict_factory(spec, statics)
+            if predict is None:
+                return None
+            fn = _ROLLOUT_CACHE.setdefault(
+                key, make_device_rollout(predict, spec, H))
+        tl, wl = spec.target_lags, spec.weather_lags
+        f32 = np.float32
+        y0 = np.asarray(y_hist, f32)[..., -tl:]
+        if spec.use_weather:
+            tw0 = np.asarray(temp_hist, f32)[..., -(wl + 1):]
+        else:                            # unused carry, keep it minimal
+            tw0 = np.zeros(y0.shape[:-1] + (1,), f32)
+        hod, dow = calendar_phases(t_start + spec.step * np.arange(H))
+        out = fn(stacked, np.asarray(mu, f32), np.asarray(sd, f32), y0, tw0,
+                 np.asarray(temps_future, f32),
+                 np.asarray(hod, f32), np.asarray(dow, f32))
+        return np.asarray(out, np.float64)

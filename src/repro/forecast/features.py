@@ -10,6 +10,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from ..timeseries.transforms import (HOUR, align_resample, calendar_features,
+                                     calendar_features_jnp, calendar_phases,
                                      lagged_features, regular_grid)
 
 
@@ -104,7 +105,13 @@ def recursive_forecast(predict_fn, spec: FeatureSpec, y_hist, temp_hist,
                        temps_future, t_start: float, horizon: int):
     """Roll a one-step model forward ``horizon`` steps (recursive strategy).
     Vectorised over leading dims: y_hist (..., L), temps_future (..., H).
-    predict_fn maps (..., F) -> (...,). Returns (..., H)."""
+    predict_fn maps (..., F) -> (...,). Returns (..., H).
+
+    This is the host-side REFERENCE path: one predict_fn round-trip per
+    step. The serving hot path is ``make_device_rollout``, which runs the
+    identical recursion as a single jitted ``lax.scan`` on device;
+    ``tests/test_fleet_rollout.py`` pins their agreement.
+    """
     y_hist = np.array(y_hist, np.float64)
     temp_hist = np.array(temp_hist, np.float64)
     preds = []
@@ -117,3 +124,65 @@ def recursive_forecast(predict_fn, spec: FeatureSpec, y_hist, temp_hist,
         preds.append(yh)
         y_hist = np.concatenate([y_hist, yh[..., None]], axis=-1)
     return np.stack(preds, axis=-1)
+
+
+def step_features_jnp(spec: FeatureSpec, y_win, t_win, cal_row):
+    """jnp twin of ``step_features`` over FIXED-SIZE trailing windows (the
+    scan carry): y_win (..., target_lags) with the most recent value last,
+    t_win (..., weather_lags+1) already including the step's forecast temp
+    at its end, cal_row (5,) precomputed calendar features for the step."""
+    import jax.numpy as jnp
+    wl = spec.weather_lags
+    cols = [y_win[..., ::-1]]                          # lag1..lagL
+    if spec.use_weather:
+        cols.append(t_win[..., -1:])                   # temp at ~t (forecast)
+        if wl:
+            cols.append(t_win[..., -2: -wl - 2: -1])
+    if spec.use_calendar:
+        cols.append(jnp.broadcast_to(cal_row, y_win.shape[:-1] + (5,)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def make_device_rollout(predict_fn, spec: FeatureSpec, horizon: int):
+    """Device-resident whole-horizon rollout: ONE jitted program that runs
+    the recursive-forecast recursion as a ``lax.scan`` over the horizon —
+    lag-window update, calendar/weather feature assembly, per-instance
+    standardization and prediction all stay on device. The host loop in
+    ``recursive_forecast`` crosses host<->device 2x per step; this crosses
+    once per score bin.
+
+    predict_fn: traceable (stacked_params, x (N, F)) -> (N,) predictions
+    (standardized features in, physical-unit predictions out).
+
+    Returns jitted ``run(stacked, mu, sd, y0, tw0, temps_future, hod, dow)``
+      stacked       pytree of per-instance model params, leading dim N
+      mu, sd        (N, F) per-instance feature standardization
+      y0            (N, target_lags) trailing target window, newest last
+      tw0           (N, weather_lags+1) trailing temperature window
+      temps_future  (N, H) weather forecasts for the horizon
+      hod, dow      (H,) calendar phases (``calendar_phases`` of the
+                    horizon timestamps — reduced on host, f32-safe)
+    -> (N, H) predictions.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def run(stacked, mu, sd, y0, tw0, temps_future, hod, dow):
+        cal = calendar_features_jnp(hod, dow)                    # (H, 5)
+        xs = (jnp.moveaxis(temps_future, -1, 0), cal)
+
+        def body(carry, inp):
+            y_win, t_win = carry
+            temp_next, cal_row = inp
+            if spec.use_weather:
+                t_win = jnp.concatenate(
+                    [t_win[..., 1:], temp_next[..., None]], axis=-1)
+            x = step_features_jnp(spec, y_win, t_win, cal_row)
+            yh = predict_fn(stacked, (x - mu) / sd)
+            y_win = jnp.concatenate([y_win[..., 1:], yh[..., None]], axis=-1)
+            return (y_win, t_win), yh
+
+        (_, _), preds = jax.lax.scan(body, (y0, tw0), xs, length=horizon)
+        return jnp.moveaxis(preds, 0, -1)
+
+    return jax.jit(run)

@@ -57,6 +57,30 @@ def _expand(X, knot_sets, cols):
     return np.concatenate(parts, axis=-1)
 
 
+def _bspline_basis_jnp(x, knots):
+    """jnp twin of ``_bspline_basis``, batched per instance and traceable
+    inside the device scoring rollout. x: (N,), knots: (N, K) each row
+    strictly increasing. Returns (N, K+2)."""
+    K = knots.shape[-1]
+    t = jnp.concatenate([jnp.repeat(knots[..., :1], 3, axis=-1), knots,
+                         jnp.repeat(knots[..., -1:], 3, axis=-1)], axis=-1)
+    x = jnp.clip(x, knots[..., 0], knots[..., -1])
+    B = ((x[..., None] >= t[..., :-1])
+         & (x[..., None] < t[..., 1:])).astype(jnp.float32)
+    # right-closed last interval (x == last knot falls in the top basis)
+    B = B.at[..., K + 1].set(jnp.where(x >= knots[..., -1], 1.0,
+                                       B[..., K + 1]))
+    for k in range(1, 4):
+        d1 = t[..., k:-1] - t[..., :-1 - k]
+        d2 = t[..., k + 1:] - t[..., 1:-k]
+        a = jnp.where(d1 > 0, (x[..., None] - t[..., :-1 - k])
+                      / jnp.where(d1 > 0, d1, 1.0) * B[..., :-1], 0.0)
+        b = jnp.where(d2 > 0, (t[..., k + 1:] - x[..., None])
+                      / jnp.where(d2 > 0, d2, 1.0) * B[..., 1:], 0.0)
+        B = a + b
+    return B[..., :K + 2]
+
+
 class GAMForecaster(ForecastModelBase):
     KIND = "GAM"
     SUPPORTS_FLEET = True
@@ -80,10 +104,11 @@ class GAMForecaster(ForecastModelBase):
         return Xe @ th[:-1] + th[-1]
 
     @classmethod
-    def _fleet_fit(cls, X, y, rng):
-        # NOTE: fleet path assumes homogeneous user_params per bin (enforced
-        # by the scheduler's bin key); default spline columns used here.
-        cols = _spline_cols({})
+    def _fleet_fit(cls, X, y, rng, up):
+        # spline columns from the bin's SHARED user_params — a non-default
+        # target_lags shifts the concurrent-temp column, so defaults here
+        # would spline the wrong feature and diverge from LocalPool
+        cols = _spline_cols(up)
         knots, Xes = [], []
         for i in range(X.shape[0]):
             ks = [np.linspace(X[i, :, j].min() - 1e-3, X[i, :, j].max() + 1e-3,
@@ -107,3 +132,24 @@ class GAMForecaster(ForecastModelBase):
             th = stacked["theta"][i]
             out[i] = Xe @ th[:-1] + th[-1]
         return out
+
+    @classmethod
+    def _rollout_statics(cls, up, stacked):
+        # the columns the model was FITTED with (shared across the bin) —
+        # static python ints, part of the compiled-rollout cache key
+        return tuple(int(c) for c in stacked["cols"][0])
+
+    @classmethod
+    def _device_predict_factory(cls, spec, statics):
+        cols = statics
+
+        def predict(stacked, x):
+            th = jnp.asarray(stacked["theta"], jnp.float32)
+            knots = jnp.asarray(stacked["knots"], jnp.float32)
+            parts = [x]
+            for i, j in enumerate(cols):
+                parts.append(_bspline_basis_jnp(x[..., j], knots[:, i]))
+            Xe = jnp.concatenate(parts, axis=-1)
+            return jnp.einsum("nf,nf->n", Xe, th[:, :-1]) + th[:, -1]
+
+        return predict

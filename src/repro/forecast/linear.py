@@ -34,7 +34,7 @@ class LinearForecaster(ForecastModelBase):
         return np.asarray(X) @ th[:-1] + th[-1]
 
     @classmethod
-    def _fleet_fit(cls, X, y, rng):
+    def _fleet_fit(cls, X, y, rng, up):
         theta = np.asarray(_ridge_fit_fleet(jnp.asarray(X), jnp.asarray(y), 1e-2))
         return {"theta": theta}
 
@@ -42,3 +42,12 @@ class LinearForecaster(ForecastModelBase):
     def _fleet_predict(cls, stacked, X):
         th = stacked["theta"]                        # (N, F+1)
         return np.einsum("nf,nf->n", np.asarray(X), th[:, :-1]) + th[:, -1]
+
+    @classmethod
+    def _fleet_predict_traced(cls, stacked, x):
+        th = jnp.asarray(stacked["theta"], jnp.float32)
+        return jnp.einsum("nf,nf->n", x, th[:, :-1]) + th[:, -1]
+
+    @classmethod
+    def _device_predict_factory(cls, spec, statics):
+        return cls._fleet_predict_traced

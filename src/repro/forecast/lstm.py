@@ -121,12 +121,15 @@ class LSTMForecaster(ForecastModelBase):
         return out[0] if single else out
 
     @classmethod
-    def _fleet_fit(cls, X, y, rng):
+    def _fleet_fit(cls, X, y, rng, up):
+        # bin-shared user_params, NOT redeclared defaults (fleet == local)
+        width = int(up["hidden"])
+        epochs, lr = int(up["epochs"]), float(up["lr"])
         N = X.shape[0]
         keys = jax.random.split(jax.random.PRNGKey(int(rng.integers(2**31))), N)
         ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
         fit = jax.vmap(lambda k, s, yy, sc: _fit_jax(
-            k, s, yy, sc, epochs=200, width=32, lr=1e-3))
+            k, s, yy, sc, epochs=epochs, width=width, lr=lr))
         params = fit(keys, jnp.asarray(X[:, :, ::-1], jnp.float32),
                      jnp.asarray(y, jnp.float32), jnp.asarray(ys, jnp.float32))
         return {**{k: np.asarray(v) for k, v in params.items()},
@@ -134,8 +137,18 @@ class LSTMForecaster(ForecastModelBase):
 
     @classmethod
     def _fleet_predict(cls, stacked, X):
-        p = {k: jnp.asarray(v) for k, v in stacked.items() if k != "y_scale"}
-        X = jnp.asarray(np.asarray(X)[:, ::-1], jnp.float32)
-        out = jax.vmap(lambda pp, xx, sc: _lstm_out(pp, xx[None], sc)[0])(
-            p, X, jnp.asarray(stacked["y_scale"], jnp.float32))
+        out = cls._fleet_predict_traced(
+            stacked, jnp.asarray(np.asarray(X), jnp.float32))
         return np.asarray(out)
+
+    @classmethod
+    def _fleet_predict_traced(cls, stacked, x):
+        p = {k: jnp.asarray(v, jnp.float32) for k, v in stacked.items()
+             if k != "y_scale"}
+        seqs = x[:, ::-1]                    # lag order -> time order
+        return jax.vmap(lambda pp, xx, sc: _lstm_out(pp, xx[None], sc)[0])(
+            p, seqs, jnp.asarray(stacked["y_scale"], jnp.float32))
+
+    @classmethod
+    def _device_predict_factory(cls, spec, statics):
+        return cls._fleet_predict_traced

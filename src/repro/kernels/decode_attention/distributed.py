@@ -19,6 +19,19 @@ from jax.sharding import PartitionSpec as P
 NEG_INF = -1e30
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map: jax >= 0.5 exposes ``jax.shard_map``
+    (replication check renamed check_vma); 0.4.x ships it under
+    jax.experimental with check_rep."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def _partial(q, k, v, lengths, offset):
     """Local unnormalised attention over one S-chunk.
     q: (B,H,D), k/v: (B,S_loc,KV,D), positions offset..offset+S_loc.
@@ -62,10 +75,9 @@ def decode_attention_distributed(q, k_cache, v_cache, lengths, *, mesh,
         l = jax.lax.psum(l * corr, seq_axis)
         return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
-    return jax.shard_map(
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, seq_axis, None, None),
                   P(bspec, seq_axis, None, None), P(bspec)),
         out_specs=P(bspec, None, None),
-        check_vma=False,
     )(q, k_cache, v_cache, lengths)

@@ -8,14 +8,30 @@ import jax
 from ..common import resolve
 from .ref import fleet_mlp_reference
 
+#: Python-level dispatch counter. Inside a jitted caller (the device
+#: scoring rollout) the count rises only while TRACING — once per compiled
+#: bin shape — whereas the host-loop reference path dispatches once per
+#: horizon step. Benchmarks/tests read it via ``invocation_count()``.
+_invocations = 0
+
+
+def invocation_count() -> int:
+    return _invocations
+
 
 @partial(jax.jit, static_argnames=("impl", "block_n"))
-def fleet_mlp(x, weights, biases, *, impl: str | None = None, block_n: int = 8):
-    """x: (N,b,F); weights/biases: per-layer stacks with leading N.
-    Returns (N,b,O). ReLU between layers; final layer linear."""
+def _fleet_mlp(x, weights, biases, *, impl: str | None = None, block_n: int = 8):
     impl = resolve(impl)
     if impl == "xla":
         return fleet_mlp_reference(x, weights, biases)
     from .kernel import fleet_mlp_pallas
     return fleet_mlp_pallas(x, weights, biases, block_n=block_n,
                             interpret=(impl == "pallas_interpret"))
+
+
+def fleet_mlp(x, weights, biases, *, impl: str | None = None, block_n: int = 8):
+    """x: (N,b,F); weights/biases: per-layer stacks with leading N.
+    Returns (N,b,O). ReLU between layers; final layer linear."""
+    global _invocations
+    _invocations += 1
+    return _fleet_mlp(x, weights, biases, impl=impl, block_n=block_n)

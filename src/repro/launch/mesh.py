@@ -5,17 +5,25 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kw(n_axes: int) -> dict:
+    """``axis_types`` only where the running jax has it (>= 0.5); on older
+    versions every axis is Auto-typed already, so omitting it is identical."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod (TPU v5e); 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kw(len(axes)))
 
 
 def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+                         **_axis_type_kw(len(axes)))
 
 
 def dp_axes(mesh) -> tuple:

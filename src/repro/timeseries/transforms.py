@@ -1,7 +1,9 @@
 """Time-series transformations (paper §4.1, Fig. 4) + feature engineering
 (Table 1): alignment/resampling of irregular feeds, integration of
 instantaneous signals into energy, lagged features, calendar features.
-All numpy (host-side data prep) — model math lives in JAX.
+Mostly numpy (host-side data prep); the calendar features additionally
+ship a jnp form (``calendar_features_jnp``) so the device-resident scoring
+rollout can assemble them inside a jitted program.
 """
 from __future__ import annotations
 
@@ -90,15 +92,34 @@ def lagged_features(series: np.ndarray, lags) -> np.ndarray:
     return out
 
 
+def calendar_phases(times) -> Tuple[np.ndarray, np.ndarray]:
+    """Epoch times -> (hour-of-day 0..24, day-of-week 0..6), float64.
+
+    The modular reduction happens HERE, on the host in float64: epoch
+    seconds overflow float32 precision after ~194 days, so a jitted
+    (float32) program must receive the reduced phases, never raw times.
+    """
+    t = np.asarray(times, np.float64)
+    return (t % DAY) / HOUR, (t // DAY) % 7
+
+
 def calendar_features(times) -> np.ndarray:
     """Paper Table 1: time-of-day + week-day features (smooth encodings)."""
-    t = np.asarray(times, np.float64)
-    hod = (t % DAY) / HOUR                    # 0..24
-    dow = ((t // DAY) % 7).astype(np.int64)   # 0..6
+    hod, dow = calendar_phases(times)
     feats = [np.sin(2 * np.pi * hod / 24), np.cos(2 * np.pi * hod / 24),
              np.sin(2 * np.pi * dow / 7), np.cos(2 * np.pi * dow / 7),
              (dow >= 5).astype(np.float64)]
     return np.stack(feats, axis=1)
+
+
+def calendar_features_jnp(hod, dow):
+    """jnp twin of ``calendar_features`` over pre-reduced phases (see
+    ``calendar_phases``), traceable inside the device scoring rollout."""
+    import jax.numpy as jnp
+    return jnp.stack(
+        [jnp.sin(2 * jnp.pi * hod / 24), jnp.cos(2 * jnp.pi * hod / 24),
+         jnp.sin(2 * jnp.pi * dow / 7), jnp.cos(2 * jnp.pi * dow / 7),
+         (dow >= 5).astype(jnp.float32)], axis=-1)
 
 
 def train_val_split(times, values, split_time):

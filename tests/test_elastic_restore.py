@@ -2,6 +2,7 @@
 DIFFERENT (shrunken) mesh with new shardings — the node-failure recovery
 path claimed in DESIGN.md. Subprocess (needs 8 placeholder devices)."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -47,7 +48,10 @@ def test_checkpoint_restores_onto_shrunken_mesh():
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         timeout=300,
         env={"PYTHONPATH": str(Path(__file__).parent.parent / "src"),
-             "PATH": "/usr/bin:/bin"},
+             "PATH": "/usr/bin:/bin",
+             # without this, jax probes for accelerator plugins and hangs
+             # on hosts with a baked-in (but absent) TPU toolchain
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert json.loads(proc.stdout.strip().splitlines()[-1])["ok"]

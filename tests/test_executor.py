@@ -93,6 +93,70 @@ def test_straggler_speculation_does_not_duplicate_results():
         assert len(c.predictions.history(name)) == 1
 
 
+class _SlowPrimaryDeadBackup(ModelInterface):
+    """The straggler's FIRST score attempt is slow but succeeds; every
+    later copy (speculative backup + its retries) dies instantly."""
+    CALLS = {}
+    LOCK = threading.Lock()
+
+    def load(self): pass
+    def transform(self): pass
+    def train(self): return {}
+
+    def score(self, m):
+        with _SlowPrimaryDeadBackup.LOCK:
+            n = _SlowPrimaryDeadBackup.CALLS.get(self.model_id, 0)
+            _SlowPrimaryDeadBackup.CALLS[self.model_id] = n + 1
+        if self.model_id.endswith("slow"):
+            if n == 0:
+                time.sleep(1.2)
+                return np.arange(2.0), np.ones(2)
+            raise RuntimeError("backup copy died")
+        return np.arange(2.0), np.ones(2)
+
+
+def test_backup_failure_does_not_discard_primary_success():
+    """A speculative backup that exhausts its retries while the primary is
+    still running must NOT record the job as failed — the late primary
+    success wins, and the job must not re-fire next poll."""
+    _SlowPrimaryDeadBackup.CALLS = {}
+    c = _mk_castor(_SlowPrimaryDeadBackup, n=6, slow=True)
+    c.tick(0.0, executor="local")                    # trains
+    ex = LocalPoolExecutor(c, max_parallel=8, max_retries=1,
+                           straggler_min_s=0.1, straggler_factor=2.0)
+    res = ex.run(c.scheduler.poll(1.0))
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    # the backup really did fire and fail
+    assert _SlowPrimaryDeadBackup.CALLS["d0slow"] >= 2
+    assert len(c.predictions.history("d0slow")) == 1
+    # no spurious requeue: the failure path must not have marked the job
+    assert not c.scheduler.poll(2.0)
+
+
+def test_scheduled_at_overrides_user_params_now():
+    """A stray "now" inside a deployment's user_params must not pin jobs
+    to a stale timestamp — job.scheduled_at always wins."""
+    from repro.timeseries.ingest import SiteSpec, build_site
+    c = Castor()
+    build_site(c, SiteSpec("N", n_prosumers=1, n_feeders=1,
+                           n_substations=1, seed=4),
+               t0=0.0, t1=40 * 86400.0)
+    now = 35 * 86400.0
+    c.publish("lr", "1.0", LinearForecaster)
+    c.deploy_for_all(package="lr", signal="ENERGY_LOAD", name_prefix="n",
+                     kind="PROSUMER", train=Schedule(now, 1e9),
+                     score=Schedule(now, 3600.0),
+                     user_params={"train_window_days": 14,
+                                  "now": 7 * 86400.0})   # stale!
+    res = c.tick(now, executor="local")
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    assert c.predictions.history("n-N_PRO_0_0")[0].times[0] == now
+    # and through the fleet path at the NEXT poll time
+    res = c.tick(now + 3600.0, executor="fleet")
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    assert c.predictions.history("n-N_PRO_0_0")[1].times[0] == now + 3600.0
+
+
 def _smartgrid(n=6):
     from repro.timeseries.ingest import SiteSpec, build_site
     c = Castor()

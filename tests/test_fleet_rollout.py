@@ -1,0 +1,141 @@
+"""Device-resident scoring rollout + fleet/local equivalence with
+NON-DEFAULT hyperparameters (regression for the `_fleet_fit` hardcoded-hp
+and GAM default-spline-cols bugs).
+
+Three contracts pinned here, each across all four forecasters:
+  * jitted lax.scan rollout == numpy ``recursive_forecast`` reference
+  * ``fleet_score`` == per-instance ``score()`` given the same trained
+    params (the scoring half of LocalPool ≡ Fleet)
+  * fleet training honors the bin's user_params (widths, spline columns)
+"""
+import numpy as np
+import pytest
+
+from repro.core import Castor, ModelDeployment, Schedule
+from repro.forecast import (ANNForecaster, GAMForecaster, LSTMForecaster,
+                            LinearForecaster)
+from repro.timeseries.ingest import SiteSpec, build_site
+from repro.timeseries.transforms import DAY
+
+NOW = 40 * DAY
+ENTS = ["R_PRO_0_0", "R_PRO_0_1", "R_PRO_0_2"]
+
+# deliberately NON-default hyperparameters: the fleet path must derive
+# everything from user_params, never from redeclared defaults
+MODELS = {
+    "lr": (LinearForecaster, {"target_lags": 12, "weather_lags": 4}),
+    "gam": (GAMForecaster, {"target_lags": 12, "weather_lags": 4}),
+    "ann": (ANNForecaster, {"hidden": 24, "epochs": 40, "target_lags": 12}),
+    "lstm": (LSTMForecaster, {"hidden": 12, "epochs": 40, "target_lags": 12}),
+}
+
+
+@pytest.fixture(scope="module")
+def castor():
+    c = Castor()
+    build_site(c, SiteSpec("R", n_prosumers=3, n_feeders=1,
+                           n_substations=1, seed=5),
+               t0=0.0, t1=NOW + 2 * DAY)
+    return c
+
+
+def _instances(c, cls, hp, extra=None):
+    up = {"train_window_days": 14, "now": NOW, **hp, **(extra or {})}
+    return [cls(context=c.graph.context("ENERGY_LOAD", e), task="score",
+                model_id=f"fr-{e}", model_version=None,
+                user_params=up, system=c) for e in ENTS]
+
+
+@pytest.fixture(scope="module")
+def trained(castor):
+    """Fleet-trained model objects per kind (shared across tests)."""
+    return {kind: cls.fleet_train(_instances(castor, cls, hp))
+            for kind, (cls, hp) in MODELS.items()}
+
+
+@pytest.mark.parametrize("kind", list(MODELS))
+def test_device_rollout_matches_numpy_reference(castor, trained, kind):
+    """rollout='device' (one jitted lax.scan per bin) and rollout='host'
+    (numpy recursive_forecast) must agree — same recursion, same params."""
+    cls, hp = MODELS[kind]
+    device = cls.fleet_score(_instances(castor, cls, hp), trained[kind])
+    host = cls.fleet_score(_instances(castor, cls, hp, {"rollout": "host"}),
+                           trained[kind])
+    for (dt, dv), (ht, hv) in zip(device, host):
+        np.testing.assert_allclose(dt, ht)
+        np.testing.assert_allclose(dv, hv, rtol=2e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("kind", list(MODELS))
+def test_fleet_score_matches_single_score(castor, trained, kind):
+    """Given identical trained params, the megabatched fleet scoring path
+    equals N per-instance score() calls (observational equivalence)."""
+    cls, hp = MODELS[kind]
+    insts = _instances(castor, cls, hp)
+    fleet = cls.fleet_score(insts, trained[kind])
+    for inst, mo, (ft, fv) in zip(insts, trained[kind], fleet):
+        st, sv = inst.score(mo)
+        np.testing.assert_allclose(ft, st)
+        np.testing.assert_allclose(fv, sv, rtol=2e-3, atol=1e-3)
+
+
+def test_fleet_fit_honors_user_hyperparams(trained):
+    """Regression: ANN/LSTM fleet training hardcoded width/epochs/lr, so a
+    hidden=24 deployment fleet-trained a width-64 model."""
+    ann = trained["ann"][0]["params"]
+    assert ann["w0"].shape[-1] == 24, ann["w0"].shape
+    assert ann["w1"].shape == (24, 24)
+    lstm = trained["lstm"][0]["params"]
+    assert lstm["wh0"].shape == (12, 48), lstm["wh0"].shape
+    # GAM: non-default target_lags moves the concurrent-temp spline column
+    gam = trained["gam"][0]["params"]
+    np.testing.assert_array_equal(gam["cols"], [0, 12])
+
+
+def _deployed_castor(kind, executor):
+    cls, hp = MODELS[kind]
+    c = Castor()
+    build_site(c, SiteSpec("Q", n_prosumers=4, n_feeders=1,
+                           n_substations=1, seed=6),
+               t0=0.0, t1=NOW + 2 * DAY)
+    c.publish(kind, "1.0", cls)
+    c.deploy_for_all(package=kind, signal="ENERGY_LOAD", name_prefix="e",
+                     kind="PROSUMER", train=Schedule(NOW, 1e12),
+                     score=Schedule(NOW, 1e12),
+                     user_params={"train_window_days": 14, **hp})
+    res = c.tick(NOW, executor=executor)
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    return c
+
+
+@pytest.mark.parametrize("kind", ["lr", "gam"])
+def test_fleet_equals_local_tick_nondefault_hp(kind):
+    """End-to-end: with non-default hyperparameters, the two executors
+    persist identical forecasts for the deterministic (closed-form)
+    models. Catches both satellite bugs: hardcoded fleet hp and GAM's
+    default spline columns."""
+    ca = _deployed_castor(kind, "fleet")
+    cb = _deployed_castor(kind, "local")
+    for i in range(4):
+        fa = ca.predictions.history(f"e-Q_PRO_0_{i}")
+        fb = cb.predictions.history(f"e-Q_PRO_0_{i}")
+        assert len(fa) == len(fb) == 1
+        np.testing.assert_allclose(fa[0].times, fb[0].times)
+        np.testing.assert_allclose(fa[0].values, fb[0].values,
+                                   rtol=2e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("kind", ["ann", "lstm"])
+def test_fleet_tick_trains_configured_width(kind):
+    """End-to-end regression through the executor: fleet-trained versions
+    carry the deployment's width, not the hardcoded default."""
+    c = _deployed_castor(kind, "fleet")
+    width = MODELS[kind][1]["hidden"]
+    for i in range(4):
+        params = c.versions.get(f"e-Q_PRO_0_{i}").params["params"]
+        shape = (params["w1"].shape if kind == "ann"
+                 else params["wh0"].shape)
+        assert shape == ((width, width) if kind == "ann"
+                         else (width, 4 * width)), shape
+        fc = c.predictions.history(f"e-Q_PRO_0_{i}")[-1]
+        assert np.all(np.isfinite(fc.values))
