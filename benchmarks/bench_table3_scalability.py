@@ -13,7 +13,13 @@ Two execution modes are swept:
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -126,8 +132,137 @@ def rollout_rows() -> list[Row]:
     ]
 
 
+SHARD_SWEEP = (1, 4)            # host device counts (CPU CI: forced devices)
+SHARD_GATE = 1.5                # min sharded throughput at 4 devices vs 1
+
+
+def _shard_gate() -> float:
+    """Near-linear per-device throughput can only materialize up to the
+    PHYSICAL core count: on a >=4-core host (CI runners) the 4-device
+    sweep must clear SHARD_GATE; a 2-core box tops out at 2x ideal, so the
+    gate scales to 60% of the backable parallelism there."""
+    cores = os.cpu_count() or 1
+    return max(1.1, min(SHARD_GATE, 0.6 * min(cores, SHARD_SWEEP[-1])))
+
+# Per-device work must be the scaling unit, so the sweep pins the XLA CPU
+# client to one compute thread per process — otherwise the 1-device
+# baseline silently multithreads across the same cores the 4-device run
+# uses and the comparison measures nothing.
+_SHARD_SCRIPT = textwrap.dedent("""
+    import os, sys, time, json
+    ndev = int(sys.argv[1])
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={ndev} "
+        "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+    import numpy as np
+    import jax
+    from repro.forecast.ann import ANNForecaster
+    from repro.launch.mesh import make_fleet_mesh
+
+    assert jax.device_count() == ndev, (jax.device_count(), ndev)
+    N, T, F = 128, 120, 53
+    up = {**ANNForecaster.DEFAULTS, "hidden": 8, "epochs": 300}
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(N, T, F))
+    y = rng.normal(size=(N, T))
+    mesh = make_fleet_mesh()              # None at ndev=1
+
+    def fit():
+        return ANNForecaster._fleet_fit(X, y, np.random.default_rng(1), up,
+                                        mesh=mesh)
+
+    fit()                                 # compile
+    ts = []
+    for _ in range(4):                    # min-of-reps: robust to bg load
+        t0 = time.perf_counter()
+        fit()
+        ts.append(time.perf_counter() - t0)
+    result = {"ndev": ndev, "seconds": min(ts)}
+
+    if ndev > 1:
+        # pin sharded == unsharded == local through a real (small) fleet
+        # (castor factory + tolerances shared with tests/test_fleet_mesh.py
+        # via repro.testing so the gate and the test cannot drift)
+        from repro.core.executor import LocalPoolExecutor
+        from repro.forecast import LinearForecaster
+        from repro.testing import (FLEET_ATOL, FLEET_NOW, FLEET_RTOL,
+                                   build_fleet_castor)
+
+        runs = {}
+        for tag, mesh_opt, ex in [("sharded", "auto", "fleet"),
+                                  ("unsharded", "off", "fleet"),
+                                  ("local", "off", "local")]:
+            c, fx = build_fleet_castor("lr", LinearForecaster, {}, mesh_opt,
+                                       seed=11, site="S",
+                                       run=(ex == "fleet"))
+            if ex == "fleet":
+                if tag == "sharded":
+                    assert all(b["sharded"] for b in fx.last_bin_stats)
+                    result["bins"] = fx.last_bin_stats
+            else:
+                res = LocalPoolExecutor(c, max_parallel=8).run(
+                    c.scheduler.poll(FLEET_NOW))
+                assert all(r.ok for r in res), \
+                    [r.error for r in res if not r.ok]
+            runs[tag] = [c.predictions.history(f"s-S_PRO_0_{i}")[0].values
+                         for i in range(6)]
+        dev = 0.0
+        for tag in ("unsharded", "local"):
+            for a, b in zip(runs["sharded"], runs[tag]):
+                assert np.allclose(a, b, rtol=FLEET_RTOL, atol=FLEET_ATOL), tag
+                dev = max(dev, float(np.max(np.abs(a - b))))
+        result["equiv_max_dev"] = dev
+    print(json.dumps(result))
+""")
+
+
+def shard_rows() -> list[Row]:
+    """Device-count sweep of the mesh-sharded fleet path (CPU CI analogue
+    of adding accelerators): gates >= SHARD_GATE x throughput at 4 host
+    devices vs 1, and pins sharded == unsharded == LocalPool forecasts.
+    Writes the sharded run's per-bin telemetry for make_tables.py."""
+    import repro.testing as rt
+    if (os.cpu_count() or 1) < 2:
+        # one physical core cannot back multiple devices: any "speedup"
+        # would be noise, so report the skip instead of asserting on it
+        return [("table3_shard_skipped", 0.0,
+                 "single_core_host_cannot_back_multiple_devices")]
+    results = {}
+    env = rt.subprocess_env(Path(__file__).parent.parent / "src")
+    for ndev in SHARD_SWEEP:
+        proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT, str(ndev)],
+                              capture_output=True, text=True, timeout=520,
+                              env=env)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        results[ndev] = json.loads(proc.stdout.strip().splitlines()[-1])
+    t1 = results[SHARD_SWEEP[0]]["seconds"]
+    t4 = results[SHARD_SWEEP[-1]]["seconds"]
+    speedup = t1 / t4
+    gate = _shard_gate()
+    assert speedup >= gate, \
+        f"sharded fleet only {speedup:.2f}x at {SHARD_SWEEP[-1]} devices " \
+        f"(gate {gate:.2f}x on {os.cpu_count()} cores)"
+    art = Path("artifacts")
+    art.mkdir(exist_ok=True)
+    (art / "table3_fleet_bins.json").write_text(json.dumps({
+        "devices": SHARD_SWEEP[-1],
+        "speedup_vs_1dev": speedup,
+        "equiv_max_dev": results[SHARD_SWEEP[-1]]["equiv_max_dev"],
+        "bins": results[SHARD_SWEEP[-1]]["bins"]}, indent=1))
+    return [
+        (f"table3_shard_ndev{SHARD_SWEEP[0]}", t1 * 1e6,
+         "N=128_ann_fleet_fit_1device"),
+        (f"table3_shard_ndev{SHARD_SWEEP[-1]}", t4 * 1e6,
+         f"N=128_ann_fleet_fit_speedup_vs_1dev={speedup:.2f}x"),
+        ("table3_shard_equivalence", 0.0,
+         f"max_forecast_dev={results[SHARD_SWEEP[-1]]['equiv_max_dev']:.1e}"
+         "_sharded==unsharded==local"),
+    ]
+
+
 def run() -> list[Row]:
     rows: list[Row] = rollout_rows()
+    rows.extend(shard_rows())
     for n in SWEEP:
         c, now = _setup(n)
         jobs = c.scheduler.poll(now + HOUR)

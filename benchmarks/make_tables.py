@@ -10,6 +10,30 @@ from repro.configs import SHAPES, get_config, list_archs, shape_applicable
 from .bench_roofline import rows_from_artifacts
 
 ART = Path("artifacts/dryrun")
+FLEET_ART = Path("artifacts/table3_fleet_bins.json")
+
+
+def fleet_shard_table() -> str:
+    """Per-bin telemetry of the mesh-sharded fleet path, from the artifact
+    written by benchmarks.bench_table3_scalability.shard_rows."""
+    if not FLEET_ART.exists():
+        return "_no artifacts/table3_fleet_bins.json — run " \
+               "`python -m benchmarks.run` first_"
+    r = json.loads(FLEET_ART.read_text())
+    lines = [
+        f"Sharded fleet sweep: **{r['speedup_vs_1dev']:.2f}x** throughput at "
+        f"{r['devices']} host devices vs 1; sharded == unsharded == local "
+        f"pinned (max forecast deviation {r['equiv_max_dev']:.1e}).",
+        "",
+        "| bin | jobs | devices | pad | dispatches | read_many | seconds |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for b in r["bins"]:
+        lines.append(
+            f"| `{b['bin']}` | {b['jobs']} | {b['mesh_devices']} "
+            f"| {b['pad']} | {b['dispatches']} | {b['read_many_calls']} "
+            f"| {b['seconds']:.3f} |")
+    return "\n".join(lines)
 
 
 def dryrun_table() -> str:
@@ -72,3 +96,5 @@ if __name__ == "__main__":
     print(dryrun_table())
     print("\n### Roofline (single-pod 16x16, per device)\n")
     print(roofline_table("pod"))
+    print("\n### Sharded fleet bins (Table-3 device sweep)\n")
+    print(fleet_shard_table())

@@ -9,10 +9,13 @@ Two interchangeable executors:
   sweeps.
 
 * ``FleetExecutor`` — the TPU-native adaptation: due jobs are binned by
-  (implementation, version, task, params) and each bin executes as ONE
-  megabatched computation via the implementation's ``fleet_train`` /
-  ``fleet_score`` hooks (vmapped JAX under the hood). Implementations without
-  fleet hooks fall back to the pool.
+  (implementation, version, task, params, scheduled_at) and each bin
+  executes as ONE megabatched computation via the implementation's
+  ``fleet_train`` / ``fleet_score`` hooks (vmapped JAX under the hood; with
+  >1 device the bin's instance axis is shard_map-partitioned across a fleet
+  mesh — see the class docstring). Implementations without fleet hooks fall
+  back to the pool. Train bins always phase before score bins, and a score
+  bin containing never-trained deployments fails only those jobs.
 
 Data path: a fleet bin fetches ALL of its series history with a single
 ``store.read_many`` call (via ``ForecastModelBase.fleet_load``) against the
@@ -87,8 +90,10 @@ class _ExecBase:
                 metadata={"train_seconds": dt, "signal": job.signal,
                           "entity": job.entity, "package": str(job.package)})
             return {"trained": True}
-        # score
-        latest = self.system.versions.get(job.deployment_name)
+        # score with the version a LIVE poller would have had at the job's
+        # boundary — catch-up occurrences must not leak later-trained models
+        latest = self.system.versions.get(job.deployment_name,
+                                          at=job.scheduled_at)
         if latest is None:
             raise RuntimeError(f"no trained version for {job.deployment_name}")
         times, values = inst.score(latest.params)
@@ -130,43 +135,53 @@ class LocalPoolExecutor(_ExecBase):
         results: Dict[int, JobResult] = {}
         durations: List[float] = []
 
-        def attempt(job: Job, idx: int, n: int) -> JobResult:
+        def attempt(job: Job) -> JobResult:
             t0 = time.perf_counter()
             try:
                 out = self._run_one(job)
                 return JobResult(job, True, time.perf_counter() - t0,
-                                 attempts=n, output=out)
+                                 output=out)
             except Exception as e:  # noqa: BLE001
                 return JobResult(job, False, time.perf_counter() - t0,
-                                 attempts=n, error=f"{type(e).__name__}: {e}")
+                                 error=f"{type(e).__name__}: {e}")
 
         with ThreadPoolExecutor(max_workers=self.max_parallel) as pool:
-            pending: Dict[Future, Tuple[Job, int, int, float]] = {}
+            pending: Dict[Future, Tuple[Job, int, float]] = {}
             backups: Dict[int, Future] = {}
             inflight: Dict[int, int] = {}    # job idx -> live copies
+            attempts: Dict[int, int] = {}    # job idx -> copies EVER submitted
+            # the retry budget is per JOB, not per copy chain: a job may run
+            # at most 1 + max_retries times total, and a speculative backup
+            # consumes one attempt from that same budget — before, the
+            # backup restarted the count and a job could burn the budget
+            # twice over
             for i, job in enumerate(jobs):
-                f = pool.submit(attempt, job, i, 1)
-                pending[f] = (job, i, 1, time.perf_counter())
+                f = pool.submit(attempt, job)
+                pending[f] = (job, i, time.perf_counter())
                 inflight[i] = 1
+                attempts[i] = 1
 
             while pending:
                 done, _ = wait(list(pending), timeout=self.straggler_min_s,
                                return_when=FIRST_COMPLETED)
                 now = time.perf_counter()
                 for f in done:
-                    job, idx, n, t0 = pending.pop(f)
+                    job, idx, t0 = pending.pop(f)
                     inflight[idx] -= 1
                     res = f.result()
                     if idx in results:      # a copy already finished
                         continue
+                    res.attempts = attempts[idx]
                     if res.ok:
+                        # speculative_win only when the winning future IS
+                        # the backup copy, not merely when one exists
+                        res.speculative_win = backups.get(idx) is f
                         results[idx] = res
                         durations.append(res.duration_s)
-                        if idx in backups and backups[idx] is not f:
-                            res.speculative_win = n > 1
-                    elif n <= self.max_retries:
-                        nf = pool.submit(attempt, job, idx, n + 1)
-                        pending[nf] = (job, idx, n + 1, now)
+                    elif attempts[idx] <= self.max_retries:
+                        nf = pool.submit(attempt, job)
+                        attempts[idx] += 1
+                        pending[nf] = (job, idx, now)
                         inflight[idx] += 1
                     elif inflight[idx] == 0:
                         # a job fails only once NO copy of it remains in
@@ -179,72 +194,151 @@ class LocalPoolExecutor(_ExecBase):
                 if self.speculative and durations:
                     med = float(np.median(durations))
                     thresh = max(self.straggler_min_s, self.straggler_factor * med)
-                    for f, (job, idx, n, t0) in list(pending.items()):
-                        if idx not in backups and now - t0 > thresh:
-                            bf = pool.submit(attempt, job, idx, n + 1)
+                    for f, (job, idx, t0) in list(pending.items()):
+                        if idx not in backups and now - t0 > thresh \
+                                and attempts[idx] <= self.max_retries:
+                            bf = pool.submit(attempt, job)
+                            attempts[idx] += 1
                             backups[idx] = bf
-                            pending[bf] = (job, idx, n + 1, now)
+                            pending[bf] = (job, idx, now)
                             inflight[idx] += 1
         return [results[i] for i in sorted(results)]
 
 
 class FleetExecutor(_ExecBase):
-    """TPU-native megabatched execution: one computation per job bin."""
+    """TPU-native megabatched execution: one computation per job bin.
 
-    def __init__(self, system, *, fallback: Optional[LocalPoolExecutor] = None):
+    Mesh sharding: with >1 jax device the bin's instance axis is partitioned
+    across a 1-D fleet mesh via shard_map (``launch.mesh.make_fleet_mesh``) —
+    still ONE dispatch per bin, each device training/scoring its N/ndev
+    slice. Uneven bins are padded to a shard multiple inside the sharded
+    call and the pad rows masked off. Opt out per deployment with
+    ``user_params["mesh"] = "off"`` or executor-wide with ``mesh="off"``;
+    per-bin telemetry (``mesh_devices``, ``pad``, ``sharded``) lands in
+    ``last_bin_stats``.
+    """
+
+    def __init__(self, system, *, fallback: Optional[LocalPoolExecutor] = None,
+                 mesh: str = "auto"):
         super().__init__(system)
         self.fallback = fallback or LocalPoolExecutor(system, max_parallel=8)
+        self.mesh = mesh                 # "auto" | "off"
         self.last_bin_stats: List[dict] = []
 
     def run(self, jobs: List[Job]) -> List[JobResult]:
+        """Phase ordering is the executor's responsibility, not the
+        caller's: all TRAIN bins complete before any SCORE bin starts (a
+        score bin may consume a version trained this cycle), matching
+        LocalPoolExecutor.run."""
         out: List[JobResult] = []
         self.last_bin_stats = []
-        for key, bin_jobs_ in bin_jobs(jobs).items():
-            cls = self.system.registry.get(key[0], key[1])
-            if not getattr(cls, "SUPPORTS_FLEET", False):
-                out.extend(self.fallback.run(bin_jobs_))
-                continue
-            t0 = time.perf_counter()
-            store = getattr(self.system, "store", None)
-            rm0 = getattr(store, "read_many_count", 0)
-            r0 = getattr(store, "read_count", 0)
-            instances = [self._instantiate(j) for j in bin_jobs_]
-            try:
-                if key[2] == "train":
-                    model_objs = cls.fleet_train(instances)
-                    for j, mo in zip(bin_jobs_, model_objs):
-                        self.system.versions.save(
-                            j.deployment_name, mo, trained_at=j.scheduled_at,
-                            metadata={"fleet": True, "signal": j.signal,
-                                      "entity": j.entity})
+        trains = [j for j in jobs if j.task == "train"]
+        scores = [j for j in jobs if j.task != "train"]
+        for phase in (trains, scores):
+            # chronological bins regardless of caller order: catch-up
+            # occurrences of one deployment must train/score oldest first
+            phase.sort(key=lambda j: j.scheduled_at)
+            fleet_bins: List[Tuple[tuple, List[Job]]] = []
+            pool_jobs: List[Job] = []
+            for key, bin_jobs_ in bin_jobs(phase).items():
+                cls = self.system.registry.get(key[0], key[1])
+                if getattr(cls, "SUPPORTS_FLEET", False):
+                    fleet_bins.append((key, bin_jobs_))
                 else:
-                    latests = [self.system.versions.get(j.deployment_name)
-                               for j in bin_jobs_]
-                    missing = [j.deployment_name for j, l in
-                               zip(bin_jobs_, latests) if l is None]
-                    if missing:
-                        raise RuntimeError(f"no trained version for {missing[:3]}")
-                    preds = cls.fleet_score(instances,
-                                            [l.params for l in latests])
-                    for j, l, (times, values) in zip(bin_jobs_, latests, preds):
-                        dep = self.system.deployments.get(j.deployment_name)
-                        self.system.predictions.save(Forecast(
-                            deployment_name=j.deployment_name, signal=j.signal,
-                            entity=j.entity, created_at=j.scheduled_at,
-                            times=np.asarray(times), values=np.asarray(values),
-                            model_version=l.version, rank=dep.rank))
-                dt = time.perf_counter() - t0
-                per = dt / max(len(bin_jobs_), 1)
-                out.extend(JobResult(j, True, per) for j in bin_jobs_)
-                self.last_bin_stats.append(
-                    {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt,
-                     "read_many_calls":
-                         getattr(store, "read_many_count", 0) - rm0,
-                     "single_reads": getattr(store, "read_count", 0) - r0})
-            except Exception as e:  # noqa: BLE001
-                dt = time.perf_counter() - t0
-                err = f"{type(e).__name__}: {e}"
-                for j in bin_jobs_:
-                    out.append(JobResult(j, False, dt / len(bin_jobs_), error=err))
-                    self.system.scheduler.mark_failed(j)
+                    # non-fleet jobs pool into ONE fallback run per phase:
+                    # scheduled_at fragments their bins, and the pool —
+                    # unlike a megabatch — has no shared-time-axis reason
+                    # to run those fragments sequentially
+                    pool_jobs.extend(bin_jobs_)
+            if pool_jobs:
+                out.extend(self.fallback.run(pool_jobs))
+            for key, bin_jobs_ in fleet_bins:
+                out.extend(self._run_bin(key, bin_jobs_))
+        return out
+
+    def _bin_mesh(self, bin_jobs_: List[Job]):
+        """Fleet mesh for one bin: auto-selected when >1 device and the bin
+        is worth splitting; ``user_params["mesh"]="off"`` opts a deployment
+        out (bins share user_params, so the first job speaks for all). The
+        mesh is sized to min(devices, bin) — a 2-job bin on an 8-device
+        host shards over 2 devices, not 8 mostly-padding shards."""
+        if self.mesh == "off" or len(bin_jobs_) < 2:
+            return None
+        dep = self.system.deployments.get(bin_jobs_[0].deployment_name)
+        if str(dep.user_params.get("mesh", "auto")).lower() == "off":
+            return None
+        import jax
+        from ..launch.mesh import make_fleet_mesh
+        return make_fleet_mesh(min(jax.device_count(), len(bin_jobs_)))
+
+    def _fail(self, job: Job, dt: float, err: str) -> JobResult:
+        self.system.scheduler.mark_failed(job)
+        return JobResult(job, False, dt, error=err)
+
+    def _run_bin(self, key, bin_jobs_: List[Job]) -> List[JobResult]:
+        cls = self.system.registry.get(key[0], key[1])
+        out: List[JobResult] = []
+        t0 = time.perf_counter()
+        store = getattr(self.system, "store", None)
+        rm0 = getattr(store, "read_many_count", 0)
+        r0 = getattr(store, "read_count", 0)
+        task = key[2]
+        latests: List = []
+        if task != "train":
+            # a deployment that was never trained fails ALONE: exclude it
+            # from the megabatch, score the rest — one cold model must not
+            # poison the whole bin (at-least-once still holds per job).
+            # at=scheduled_at: a catch-up bin scores with the versions a
+            # live poller would have had at that boundary
+            present: List[Job] = []
+            for j in bin_jobs_:
+                mv = self.system.versions.get(j.deployment_name,
+                                              at=j.scheduled_at)
+                if mv is None:
+                    out.append(self._fail(
+                        j, 0.0, f"no trained version for {j.deployment_name}"))
+                else:
+                    present.append(j)
+                    latests.append(mv)
+            bin_jobs_ = present
+            if not bin_jobs_:
+                return out
+        mesh = self._bin_mesh(bin_jobs_)
+        ndev = len(mesh.devices.flat) if mesh is not None else 1
+        pad = (-len(bin_jobs_)) % ndev
+        instances = [self._instantiate(j) for j in bin_jobs_]
+        try:
+            if task == "train":
+                model_objs = cls.fleet_train(instances, mesh=mesh)
+                for j, mo in zip(bin_jobs_, model_objs):
+                    self.system.versions.save(
+                        j.deployment_name, mo, trained_at=j.scheduled_at,
+                        metadata={"fleet": True, "signal": j.signal,
+                                  "entity": j.entity})
+            else:
+                preds = cls.fleet_score(instances,
+                                        [l.params for l in latests],
+                                        mesh=mesh)
+                for j, l, (times, values) in zip(bin_jobs_, latests, preds):
+                    dep = self.system.deployments.get(j.deployment_name)
+                    self.system.predictions.save(Forecast(
+                        deployment_name=j.deployment_name, signal=j.signal,
+                        entity=j.entity, created_at=j.scheduled_at,
+                        times=np.asarray(times), values=np.asarray(values),
+                        model_version=l.version, rank=dep.rank))
+            dt = time.perf_counter() - t0
+            per = dt / max(len(bin_jobs_), 1)
+            out.extend(JobResult(j, True, per) for j in bin_jobs_)
+            self.last_bin_stats.append(
+                {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt,
+                 "read_many_calls":
+                     getattr(store, "read_many_count", 0) - rm0,
+                 "single_reads": getattr(store, "read_count", 0) - r0,
+                 "sharded": mesh is not None, "mesh_devices": ndev,
+                 "pad": pad, "dispatches": 1})
+        except Exception as e:  # noqa: BLE001
+            dt = time.perf_counter() - t0
+            err = f"{type(e).__name__}: {e}"
+            out.extend(self._fail(j, dt / len(bin_jobs_), err)
+                       for j in bin_jobs_)
         return out

@@ -45,13 +45,29 @@ class ModelVersionStore:
             hist.append(mv)
             return mv
 
-    def get(self, model_id: str, version: Optional[int] = None) -> Optional[ModelVersion]:
+    def get(self, model_id: str, version: Optional[int] = None, *,
+            at: Optional[float] = None) -> Optional[ModelVersion]:
+        """Latest means max TRAINED time, not save order: catch-up training
+        jobs (one per missed occurrence) may complete out of chronological
+        order on a parallel executor, and scoring must never pick a stale
+        boundary's model just because it finished last.
+
+        ``at`` replays history faithfully: the newest version with
+        ``trained_at <= at`` — a forecast stamped at boundary t must use
+        the model a live poller would have had at t, never one trained on
+        data observed after t. A replayed occurrence predating the first
+        training falls back to the OLDEST version (closest to honest)
+        rather than failing forever on at-least-once retries."""
         hist = self._versions.get(model_id)
         if not hist:
             return None
-        if version is None:
-            return hist[-1]
-        return hist[version - 1]
+        if version is not None:
+            return hist[version - 1]
+        key = lambda mv: (mv.trained_at, mv.version)   # noqa: E731
+        if at is not None:
+            eligible = [mv for mv in hist if mv.trained_at <= at]
+            return max(eligible, key=key) if eligible else min(hist, key=key)
+        return max(hist, key=key)
 
     def history(self, model_id: str) -> List[ModelVersion]:
         return list(self._versions.get(model_id, ()))

@@ -52,12 +52,16 @@ class ModelInterface(abc.ABC):
         """Return (times, values) prediction over the configured horizon."""
 
     # ---- optional fleet hooks (megabatched execution, DESIGN.md §2) ----
+    # ``mesh``: optional 1-D jax device mesh (launch/mesh.make_fleet_mesh);
+    # when given, the bin's instance axis is shard_map-partitioned across
+    # its devices. None = single-device vmap, identical results.
     @classmethod
-    def fleet_train(cls, instances: List["ModelInterface"]):
+    def fleet_train(cls, instances: List["ModelInterface"], *, mesh=None):
         raise NotImplementedError
 
     @classmethod
-    def fleet_score(cls, instances: List["ModelInterface"], model_objects):
+    def fleet_score(cls, instances: List["ModelInterface"], model_objects, *,
+                    mesh=None):
         raise NotImplementedError
 
 

@@ -29,6 +29,21 @@ class Schedule:
         k_last = int((last_run - self.start) // self.every)
         return max(0, k_now - k_last)
 
+    def boundaries_due(self, last_run: Optional[float], now: float,
+                       limit: Optional[int] = None) -> List[float]:
+        """The due occurrences' scheduled boundary timestamps
+        (start + k*every), oldest first; with ``limit``, the most recent
+        ones. Count and stamps come from the SAME flooring arithmetic, so
+        they cannot disagree."""
+        due = self.occurrences_due(last_run, now)
+        if due <= 0:
+            return []
+        if limit:
+            due = min(due, limit)
+        k_now = int((now - self.start) // self.every)
+        return [self.start + k * self.every
+                for k in range(k_now - due + 1, k_now + 1)]
+
 
 @dataclass(frozen=True)
 class Job:
@@ -42,42 +57,92 @@ class Job:
     user_params_key: str = ""       # part of the bin key (same config batches)
 
     @property
-    def bin_key(self) -> Tuple[str, str, str, str]:
-        return (self.package, self.version, self.task, self.user_params_key)
+    def bin_key(self) -> Tuple[str, str, str, str, float]:
+        # scheduled_at is part of the key: a fleet score bin shares ONE
+        # execution time axis (ForecastModelBase._require_one_window), so
+        # catch-up occurrences stamped at different boundaries must land in
+        # different bins instead of poisoning one megabatch
+        return (self.package, self.version, self.task, self.user_params_key,
+                self.scheduled_at)
 
 
 class ModelScheduler:
-    """Tracks last-run state per (deployment, task) and emits due jobs."""
+    """Tracks last-run state per (deployment, task) and emits due jobs.
 
-    def __init__(self, deployments, registry):
+    ``max_catchup`` bounds how many occurrences ONE poll may emit per
+    (deployment, task) — queued failure retries and newly missed
+    boundaries combined: a live poller that stalled for weeks, or a
+    permanently failing deployment whose every occurrence re-queues, must
+    not turn polling into an unbounded replay storm (each occurrence is a
+    full megabatch bin). The most recent boundaries win; older ones are
+    dropped. Set it falsy for unlimited replay."""
+
+    def __init__(self, deployments, registry, *,
+                 max_catchup: Optional[int] = 168):
         self.deployments = deployments
         self.registry = registry
+        self.max_catchup = max_catchup
         self._last: Dict[Tuple[str, str], float] = {}
+        self._failed: Dict[Tuple[str, str], set] = {}   # scheduled_at stamps
 
     def poll(self, now: float) -> List[Job]:
+        """The poll is ATOMIC: watermarks advance and queued retries clear
+        only after every due deployment's registry lookup has succeeded —
+        a raising lookup (e.g. a deployment of a never-published package)
+        leaves ALL per-deployment state untouched, so no occurrence can be
+        emitted into a poll that then throws the jobs away."""
         jobs: List[Job] = []
+        planned: List[tuple] = []        # (dep, task, key, stamps, advance, version)
         for dep in self.deployments.all():
             for task in ("train", "score"):
                 sched: Optional[Schedule] = getattr(dep, task)
                 if sched is None:
                     continue
-                due = sched.occurrences_due(self._last.get((dep.name, task)), now)
-                if due <= 0:
+                key = (dep.name, task)
+                # one job PER missed occurrence, stamped at its scheduled
+                # boundary — forecasts and model versions must carry
+                # lineage timestamps of when the work was DUE, not
+                # whenever the poll happened to run (Castor persists
+                # rolling-horizon predictions at their scheduled times) —
+                # plus failed occurrences re-firing at their ORIGINAL
+                # boundaries
+                new = sched.boundaries_due(self._last.get(key), now,
+                                           self.max_catchup)
+                stamps = sorted(self._failed.get(key, ())) + new
+                if not stamps:
                     continue
+                if self.max_catchup:
+                    # retries + new boundaries share the cap (stamps are
+                    # chronological: queued retries predate new ones)
+                    stamps = stamps[-self.max_catchup:]
                 version = self.registry.resolve_version(dep.package, dep.version)
+                planned.append((dep, task, key, stamps, bool(new), version))
+        # every lookup succeeded: commit state and emit
+        for dep, task, key, stamps, advance, version in planned:
+            self._failed.pop(key, None)
+            if advance:
+                self._last[key] = now
+            for ts in dict.fromkeys(stamps):
                 jobs.append(Job(
                     deployment_name=dep.name, package=dep.package,
-                    version=version, task=task, scheduled_at=now,
+                    version=version, task=task, scheduled_at=ts,
                     signal=dep.signal, entity=dep.entity,
                     user_params_key=_params_key(dep.user_params)))
-                self._last[(dep.name, task)] = now
-        # deterministic order: training before scoring, then by name
-        jobs.sort(key=lambda j: (j.task != "train", j.deployment_name))
+        # deterministic order: training before scoring, then chronological
+        # (catch-up occurrences execute oldest first), then by name
+        jobs.sort(key=lambda j: (j.task != "train", j.scheduled_at,
+                                 j.deployment_name))
         return jobs
 
     def mark_failed(self, job: Job):
-        """Failed jobs re-fire on the next poll (at-least-once semantics)."""
-        self._last.pop((job.deployment_name, job.task), None)
+        """The failed job re-fires on the next poll at its ORIGINAL
+        occurrence boundary (at-least-once per occurrence). Queuing the
+        stamp — rather than resetting the deployment's whole watermark —
+        means one failed catch-up occurrence cannot be collapsed away by
+        its siblings' success and then silently deduplicated against the
+        idempotent version/prediction stores."""
+        self._failed.setdefault((job.deployment_name, job.task),
+                                set()).add(job.scheduled_at)
 
 
 def _params_key(params: dict) -> str:

@@ -26,6 +26,88 @@ Axes = Union[None, str, Tuple[str, ...]]
 PAD_OK: set = set()         # logical axes where uneven sharding would be allowed
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map: jax >= 0.5 exposes ``jax.shard_map``
+    (replication check renamed check_vma); 0.4.x ships it under
+    jax.experimental with check_rep."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-bin sharding: partition a megabatch's INSTANCE axis over devices.
+# ---------------------------------------------------------------------------
+
+#: compiled sharded dispatchers, keyed by (caller key, mesh, replicated set,
+#: arg count) — one shard_map trace per configuration, like _ROLLOUT_CACHE.
+_FLEET_SHARDED_CACHE: Dict[tuple, object] = {}
+
+
+def _pad_leading(tree, pad: int):
+    """Pad every array leaf's leading (instance) axis by repeating its last
+    row ``pad`` times. Edge replication — never zeros — so padded instances
+    run the same numerics as a real one (e.g. GAM knot rows must stay
+    strictly increasing); their outputs are sliced off before anyone reads
+    them."""
+    import jax.numpy as jnp
+
+    def one(a):
+        a = jnp.asarray(a)
+        last = jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])
+        return jnp.concatenate([a, last], axis=0)
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def fleet_sharded(fn, mesh, *, replicated_argnums: Tuple[int, ...] = (),
+                  key=None):
+    """Wrap ``fn`` — traceable, vmapped/independent over every sharded
+    argument's LEADING instance axis, collective-free — so it executes as
+    ONE ``shard_map`` dispatch over ``mesh``'s single fleet axis: each
+    device computes its N/ndev slice of the bin.
+
+    The wrapper pads the instance axis up to a multiple of the shard count
+    (edge-replicated rows, masked back off the outputs), so uneven bins
+    just work. Arguments listed in ``replicated_argnums`` are broadcast to
+    every device unsharded. With ``key`` the shard_map trace + jit are
+    cached across calls (keyed additionally by mesh and arity), mirroring
+    the rollout cache in forecast/base.py.
+    """
+    axis = mesh.axis_names[0]
+    nshard = math.prod(mesh.shape.values())
+    repl = frozenset(replicated_argnums)
+
+    def build(nargs: int):
+        in_specs = tuple(P() if i in repl else P(axis) for i in range(nargs))
+        return jax.jit(shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
+                                        out_specs=P(axis)))
+
+    def wrapper(*args):
+        cache_k = None if key is None else (key, mesh, repl, len(args))
+        inner = _FLEET_SHARDED_CACHE.get(cache_k) if cache_k else None
+        if inner is None:
+            inner = build(len(args))
+            if cache_k is not None:
+                _FLEET_SHARDED_CACHE[cache_k] = inner
+        first = next(a for i, a in enumerate(args) if i not in repl)
+        n = jax.tree_util.tree_leaves(first)[0].shape[0]
+        pad = (-n) % nshard
+        if pad:
+            args = tuple(a if i in repl else _pad_leading(a, pad)
+                         for i, a in enumerate(args))
+        out = inner(*args)
+        if pad:
+            out = jax.tree_util.tree_map(lambda x: x[:n], out)
+        return out
+
+    return wrapper
+
+
 @dataclass(frozen=True)
 class Rules:
     params: Dict[str, Axes]

@@ -70,11 +70,15 @@ def _fit_jax(key, X, y, y_scale, *, epochs: int, width: int, lr: float):
     return params
 
 
-_fit_fleet = jax.jit(jax.vmap(
-    lambda key, X, y, ys, epochs, width, lr: _fit_jax(
-        key, X, y, ys, epochs=epochs, width=width, lr=lr),
-    in_axes=(0, 0, 0, 0, None, None, None)),
-    static_argnums=(4, 5, 6))
+def _fit_fleet_vmapped(keys, X, y, ys, epochs, width, lr):
+    """Per-instance Adam, vmapped over the bin. Kept un-jitted so the mesh
+    path can shard_map it; the single-device path jits it below."""
+    return jax.vmap(lambda k, xx, yy, sc: _fit_jax(
+        k, xx, yy, sc, epochs=epochs, width=width, lr=lr))(keys, X, y, ys)
+
+
+_fit_fleet = jax.jit(_fit_fleet_vmapped,
+                     static_argnames=("epochs", "width", "lr"))
 
 
 class ANNForecaster(ForecastModelBase):
@@ -112,7 +116,7 @@ class ANNForecaster(ForecastModelBase):
 
     # ------------- fleet hooks -------------
     @classmethod
-    def _fleet_fit(cls, X, y, rng, up):
+    def _fleet_fit(cls, X, y, rng, up, mesh=None):
         # bin-shared user_params, NOT redeclared defaults: a deployment with
         # hidden=128 must fleet-train the same width LocalPool would
         width = int(up["hidden"])
@@ -120,9 +124,16 @@ class ANNForecaster(ForecastModelBase):
         N = X.shape[0]
         keys = jax.random.split(jax.random.PRNGKey(int(rng.integers(2**31))), N)
         ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
-        params = _fit_fleet(keys, jnp.asarray(X, jnp.float32),
-                            jnp.asarray(y, jnp.float32),
-                            jnp.asarray(ys, jnp.float32), epochs, width, lr)
+        if mesh is None:
+            fit = partial(_fit_fleet, epochs=epochs, width=width, lr=lr)
+        else:
+            from ..distributed.sharding import fleet_sharded
+            fit = fleet_sharded(
+                partial(_fit_fleet_vmapped, epochs=epochs, width=width, lr=lr),
+                mesh, key=("ann_fit", epochs, width, lr))
+        params = fit(keys, jnp.asarray(X, jnp.float32),
+                     jnp.asarray(y, jnp.float32),
+                     jnp.asarray(ys, jnp.float32))
         out = {}
         for i, w in enumerate(params["w"]):
             out[f"w{i}"] = np.asarray(w)

@@ -20,8 +20,10 @@ from .features import (FeatureSpec, design_matrix, fleet_hourly_series,
                        make_device_rollout, recursive_forecast)
 
 #: compiled whole-horizon rollouts, keyed by
-#: (model class, FeatureSpec, horizon, class-specific statics) — one trace
-#: per configuration, reused across every score bin of that shape.
+#: (model class, FeatureSpec, horizon, class-specific statics, mesh) — one
+#: trace per configuration, reused across every score bin of that shape.
+#: mesh=None is the single-device jit; a fleet mesh gets its own sharded
+#: compilation (jax Mesh objects hash by devices+axes).
 _ROLLOUT_CACHE: Dict[tuple, Callable] = {}
 
 
@@ -126,14 +128,14 @@ class ForecastModelBase(ModelInterface):
         return (np.stack(Xs), np.stack(ys), np.stack(mus), np.stack(sds))
 
     @classmethod
-    def fleet_train(cls, instances: List[ModelInterface]):
+    def fleet_train(cls, instances: List[ModelInterface], *, mesh=None):
         X, y, mu, sd = cls._fleet_xy(instances)
         rng = np.random.default_rng(12345)
         # jobs in a bin share user_params_key, so the first instance's
         # merged params speak for the whole bin (hardcoding defaults here
         # is the fleet/local divergence bug this signature prevents)
         up = {**cls.DEFAULTS, **instances[0].user_params}
-        params = cls._fleet_fit(X, y, rng, up)          # stacked params
+        params = cls._fleet_fit(X, y, rng, up, mesh=mesh)   # stacked params
         out = []
         for i, inst in enumerate(instances):
             pi = {k: np.asarray(v[i]) for k, v in params.items()}
@@ -142,7 +144,8 @@ class ForecastModelBase(ModelInterface):
         return out
 
     @classmethod
-    def fleet_score(cls, instances: List[ModelInterface], model_objects):
+    def fleet_score(cls, instances: List[ModelInterface], model_objects, *,
+                    mesh=None):
         cls.fleet_load(instances)
         cls._require_one_window(instances)
         # jobs in a bin share user_params_key: one merge speaks for all
@@ -171,7 +174,8 @@ class ForecastModelBase(ModelInterface):
         vals = None
         if up.get("rollout", "device") != "host":
             vals = cls._device_rollout(spec, up, stacked, mu, sd, y_hist,
-                                       temp_hist, temps_fut, t_start, H)
+                                       temp_hist, temps_fut, t_start, H,
+                                       mesh=mesh)
         if vals is None:                 # reference path / no device hook
             def predict(x):                              # x: (N, F)
                 return cls._fleet_predict(stacked, (x - mu) / sd)
@@ -199,21 +203,23 @@ class ForecastModelBase(ModelInterface):
     @classmethod
     def _device_rollout(cls, spec: FeatureSpec, up: dict, stacked, mu, sd,
                         y_hist, temp_hist, temps_future, t_start: float,
-                        H: int) -> Optional[np.ndarray]:
+                        H: int, mesh=None) -> Optional[np.ndarray]:
         """Score a whole bin with ONE device program (jitted lax.scan over
-        the horizon) instead of H host-loop steps. Returns None when the
-        model has no traceable predictor — callers then fall back to the
-        numpy reference path, preserving the executor equivalence
-        contract for models that cannot run device-resident."""
+        the horizon) instead of H host-loop steps; with ``mesh`` the bin's
+        instance axis is shard_map-partitioned across the mesh's devices
+        (still one dispatch). Returns None when the model has no traceable
+        predictor — callers then fall back to the numpy reference path,
+        preserving the executor equivalence contract for models that
+        cannot run device-resident."""
         statics = cls._rollout_statics(up, stacked)
-        key = (cls, spec, H, statics)
+        key = (cls, spec, H, statics, mesh)
         fn = _ROLLOUT_CACHE.get(key)
         if fn is None:
             predict = cls._device_predict_factory(spec, statics)
             if predict is None:
                 return None
             fn = _ROLLOUT_CACHE.setdefault(
-                key, make_device_rollout(predict, spec, H))
+                key, make_device_rollout(predict, spec, H, mesh=mesh))
         tl, wl = spec.target_lags, spec.weather_lags
         f32 = np.float32
         y0 = np.asarray(y_hist, f32)[..., -tl:]

@@ -143,13 +143,21 @@ def step_features_jnp(spec: FeatureSpec, y_win, t_win, cal_row):
     return jnp.concatenate(cols, axis=-1)
 
 
-def make_device_rollout(predict_fn, spec: FeatureSpec, horizon: int):
+def make_device_rollout(predict_fn, spec: FeatureSpec, horizon: int,
+                        mesh=None):
     """Device-resident whole-horizon rollout: ONE jitted program that runs
     the recursive-forecast recursion as a ``lax.scan`` over the horizon —
     lag-window update, calendar/weather feature assembly, per-instance
     standardization and prediction all stay on device. The host loop in
     ``recursive_forecast`` crosses host<->device 2x per step; this crosses
     once per score bin.
+
+    With ``mesh`` (a 1-D fleet mesh from ``launch.mesh.make_fleet_mesh``)
+    the instance axis N of every input/output is shard_map-partitioned
+    across the mesh's devices — the recursion is per-instance independent,
+    so the sharded program needs no collectives and still runs as one
+    dispatch; hod/dow stay replicated. Uneven N is edge-padded to a shard
+    multiple and the pad rows are sliced back off.
 
     predict_fn: traceable (stacked_params, x (N, F)) -> (N,) predictions
     (standardized features in, physical-unit predictions out).
@@ -185,4 +193,9 @@ def make_device_rollout(predict_fn, spec: FeatureSpec, horizon: int):
         (_, _), preds = jax.lax.scan(body, (y0, tw0), xs, length=horizon)
         return jnp.moveaxis(preds, 0, -1)
 
-    return jax.jit(run)
+    if mesh is None:
+        return jax.jit(run)
+    from ..distributed.sharding import fleet_sharded
+    # hod/dow (args 6, 7) are the shared horizon calendar: replicated
+    return fleet_sharded(run, mesh, replicated_argnums=(6, 7),
+                         key=("rollout", predict_fn, spec, horizon))

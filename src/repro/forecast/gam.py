@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .base import ForecastModelBase
-from .linear import _ridge_fit
+from .linear import _ridge_fit, _ridge_fleet
 
 N_KNOTS = 8
 
@@ -104,7 +104,7 @@ class GAMForecaster(ForecastModelBase):
         return Xe @ th[:-1] + th[-1]
 
     @classmethod
-    def _fleet_fit(cls, X, y, rng, up):
+    def _fleet_fit(cls, X, y, rng, up, mesh=None):
         # spline columns from the bin's SHARED user_params — a non-default
         # target_lags shifts the concurrent-temp column, so defaults here
         # would spline the wrong feature and diverge from LocalPool
@@ -116,7 +116,7 @@ class GAMForecaster(ForecastModelBase):
             knots.append(np.stack(ks))
             Xes.append(_expand(X[i], ks, cols))
         Xe = jnp.asarray(np.stack(Xes))
-        th = jax.vmap(_ridge_fit, in_axes=(0, 0, None))(Xe, jnp.asarray(y), 1e-2)
+        th = _ridge_fleet(Xe, jnp.asarray(y), 1e-2, mesh=mesh)
         return {"theta": np.asarray(th), "knots": np.stack(knots),
                 "cols": np.tile(np.asarray(cols), (X.shape[0], 1))}
 

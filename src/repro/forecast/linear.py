@@ -21,6 +21,18 @@ _ridge_fit_fleet = jax.jit(jax.vmap(_ridge_fit, in_axes=(0, 0, None)),
                            static_argnums=())
 
 
+def _ridge_fleet(X, y, lam=1e-2, mesh=None):
+    """Vmapped per-instance ridge solve; with ``mesh`` the instance axis is
+    shard_map-partitioned (one sharded dispatch, no collectives). Shared by
+    the LR and GAM fleet fits."""
+    if mesh is None:
+        return _ridge_fit_fleet(X, y, lam)
+    from ..distributed.sharding import fleet_sharded
+    fit = fleet_sharded(lambda xx, yy: jax.vmap(_ridge_fit, (0, 0, None))(
+        xx, yy, lam), mesh, key=("ridge_fleet", lam))
+    return fit(X, y)
+
+
 class LinearForecaster(ForecastModelBase):
     KIND = "LR"
     SUPPORTS_FLEET = True
@@ -34,8 +46,9 @@ class LinearForecaster(ForecastModelBase):
         return np.asarray(X) @ th[:-1] + th[-1]
 
     @classmethod
-    def _fleet_fit(cls, X, y, rng, up):
-        theta = np.asarray(_ridge_fit_fleet(jnp.asarray(X), jnp.asarray(y), 1e-2))
+    def _fleet_fit(cls, X, y, rng, up, mesh=None):
+        theta = np.asarray(_ridge_fleet(jnp.asarray(X), jnp.asarray(y),
+                                        1e-2, mesh=mesh))
         return {"theta": theta}
 
     @classmethod

@@ -121,7 +121,7 @@ class LSTMForecaster(ForecastModelBase):
         return out[0] if single else out
 
     @classmethod
-    def _fleet_fit(cls, X, y, rng, up):
+    def _fleet_fit(cls, X, y, rng, up, mesh=None):
         # bin-shared user_params, NOT redeclared defaults (fleet == local)
         width = int(up["hidden"])
         epochs, lr = int(up["epochs"]), float(up["lr"])
@@ -130,6 +130,10 @@ class LSTMForecaster(ForecastModelBase):
         ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
         fit = jax.vmap(lambda k, s, yy, sc: _fit_jax(
             k, s, yy, sc, epochs=epochs, width=width, lr=lr))
+        if mesh is not None:
+            from ..distributed.sharding import fleet_sharded
+            fit = fleet_sharded(fit, mesh,
+                                key=("lstm_fit", epochs, width, lr))
         params = fit(keys, jnp.asarray(X[:, :, ::-1], jnp.float32),
                      jnp.asarray(y, jnp.float32), jnp.asarray(ys, jnp.float32))
         return {**{k: np.asarray(v) for k, v in params.items()},

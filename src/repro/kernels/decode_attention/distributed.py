@@ -16,20 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ...distributed.sharding import shard_map_compat as _shard_map
+
 NEG_INF = -1e30
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """Version-portable shard_map: jax >= 0.5 exposes ``jax.shard_map``
-    (replication check renamed check_vma); 0.4.x ships it under
-    jax.experimental with check_rep."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is not None:
-        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm_exp
-    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_rep=False)
 
 
 def _partial(q, k, v, lengths, offset):

@@ -4,6 +4,7 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from ..common import resolve
 from .ref import fleet_mlp_reference
@@ -19,14 +20,30 @@ def invocation_count() -> int:
     return _invocations
 
 
+def _pad0(a, pad):
+    return jnp.concatenate(
+        [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+
+
 @partial(jax.jit, static_argnames=("impl", "block_n"))
 def _fleet_mlp(x, weights, biases, *, impl: str | None = None, block_n: int = 8):
     impl = resolve(impl)
     if impl == "xla":
         return fleet_mlp_reference(x, weights, biases)
     from .kernel import fleet_mlp_pallas
-    return fleet_mlp_pallas(x, weights, biases, block_n=block_n,
-                            interpret=(impl == "pallas_interpret"))
+    # the Pallas grid needs N % block_n == 0; a mesh-sharded fleet bin hands
+    # each device an arbitrary N/ndev slice, so zero-pad up to the block
+    # multiple here (zero weights -> zero outputs, sliced off below)
+    N = x.shape[0]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        x = _pad0(x, pad)
+        weights = [_pad0(w, pad) for w in weights]
+        biases = [_pad0(b, pad) for b in biases]
+    out = fleet_mlp_pallas(x, weights, biases, block_n=bn,
+                           interpret=(impl == "pallas_interpret"))
+    return out[:N] if pad else out
 
 
 def fleet_mlp(x, weights, biases, *, impl: str | None = None, block_n: int = 8):

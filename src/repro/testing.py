@@ -1,0 +1,52 @@
+"""Shared fixtures for the multi-device (forced host devices) subprocess
+harnesses in tests/test_fleet_mesh.py and benchmarks/bench_table3 — one
+place for the castor factory, subprocess env, and equivalence tolerances
+so the test and the benchmark gate cannot drift apart.
+"""
+from __future__ import annotations
+
+import os
+
+DAY = 86400.0
+FLEET_NOW = 35 * DAY
+
+#: sharded == unsharded forecast agreement: float32 batched solves/matmuls
+#: reassociate across shard boundaries (measured deviations are ~1e-5)
+FLEET_RTOL, FLEET_ATOL = 2e-3, 1e-3
+
+
+def subprocess_env(src_dir) -> dict:
+    """Minimal env for a jax subprocess (the device-count override must
+    precede jax init, hence subprocesses at all). JAX_PLATFORMS must be
+    forwarded: without it jax probes for accelerator plugins and hangs on
+    hosts with a baked-in (but absent) TPU toolchain."""
+    return {"PYTHONPATH": str(src_dir),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+
+
+def build_fleet_castor(kind: str, cls, hp: dict, mesh_opt: str, *,
+                       n: int = 6, seed: int = 9, site: str = "Z",
+                       run: bool = True):
+    """Small smart-grid fleet: one ``kind`` deployment per prosumer
+    (named ``s-{site}_PRO_0_{i}``), train+score due at FLEET_NOW. With
+    ``run`` the due jobs execute through a FleetExecutor (asserting
+    success). Returns ``(castor, fleet_executor)``."""
+    from .core import Castor, Schedule
+    from .core.executor import FleetExecutor
+    from .timeseries.ingest import SiteSpec, build_site
+    c = Castor()
+    build_site(c, SiteSpec(site, n_prosumers=n, n_feeders=1,
+                           n_substations=1, seed=seed),
+               t0=0.0, t1=38 * DAY)
+    c.publish(kind, "1.0", cls)
+    c.deploy_for_all(package=kind, signal="ENERGY_LOAD", name_prefix="s",
+                     kind="PROSUMER", train=Schedule(FLEET_NOW, 1e12),
+                     score=Schedule(FLEET_NOW, 1e12),
+                     user_params={"train_window_days": 14,
+                                  "mesh": mesh_opt, **hp})
+    fx = FleetExecutor(c)
+    if run:
+        res = fx.run(c.scheduler.poll(FLEET_NOW))
+        assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    return c, fx

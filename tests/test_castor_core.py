@@ -8,7 +8,7 @@ from repro.core import Castor, ModelDeployment, Schedule
 from repro.core.registry import ModelInterface, ModelRegistry
 from repro.core.scheduler import Job, ModelScheduler, bin_jobs
 from repro.core.semantics import Entity, SemanticGraph, Signal
-from repro.core.lineage import Forecast, PredictionStore
+from repro.core.lineage import Forecast, ModelVersionStore, PredictionStore
 
 
 class _Dummy(ModelInterface):
@@ -73,6 +73,140 @@ def test_scheduler_emits_and_requeues_on_failure():
     assert [j.task for j in jobs3] == ["score"]
 
 
+def _score_only_castor(every=10.0):
+    c = Castor()
+    c.publish("pkg", "1.0", _Dummy)
+    c.add_signal("S")
+    c.add_entity("E")
+    c.deploy(ModelDeployment(name="d1", package="pkg", signal="S", entity="E",
+                             train=None, score=Schedule(0.0, every)))
+    return c
+
+
+def test_scheduler_catchup_emits_one_job_per_missed_occurrence():
+    """K missed occurrences yield K jobs stamped at their scheduled
+    boundaries (start + k*every) — NOT one job stamped at poll time.
+    Regression: catch-up used to collapse to a single job whose lineage
+    timestamp drifted to whenever the poll happened to run."""
+    c = _score_only_castor(every=10.0)
+    assert [j.scheduled_at for j in c.scheduler.poll(0.0)] == [0.0]
+    jobs = c.scheduler.poll(35.0)            # occurrences 10, 20, 30 missed
+    assert [j.scheduled_at for j in jobs] == [10.0, 20.0, 30.0]
+    assert all(j.task == "score" for j in jobs)
+    # occurrences already emitted never re-fire
+    assert c.scheduler.poll(39.0) == []
+    assert [j.scheduled_at for j in c.scheduler.poll(41.0)] == [40.0]
+
+
+def test_scheduler_first_fire_stamped_at_boundary_not_poll_time():
+    """The first firing collapses history by design (one catch-up job),
+    but even that job is stamped at its occurrence boundary."""
+    c = _score_only_castor(every=10.0)
+    jobs = c.scheduler.poll(1003.0)
+    assert [j.scheduled_at for j in jobs] == [1000.0]
+
+
+def test_scheduler_mark_failed_refires_at_boundary():
+    """A failed job re-fires on the next poll (at-least-once) stamped at
+    its ORIGINAL occurrence boundary."""
+    c = _score_only_castor(every=10.0)
+    c.scheduler.poll(0.0)
+    (job,) = c.scheduler.poll(10.0)
+    assert job.scheduled_at == 10.0
+    c.scheduler.mark_failed(job)
+    refire = c.scheduler.poll(13.0)
+    assert [j.scheduled_at for j in refire] == [10.0]
+    # and the re-fired occurrence, once polled, does not fire again
+    assert c.scheduler.poll(14.0) == []
+
+
+def test_mark_failed_occurrence_not_lost_among_catchup_siblings():
+    """When one catch-up occurrence fails while its siblings succeed, the
+    FAILED boundary re-fires — it must not be collapsed into the latest
+    boundary (whose forecast already persisted, so the idempotent stores
+    would silently no-op the retry and leave a permanent lineage hole)."""
+    c = _score_only_castor(every=10.0)
+    c.scheduler.poll(0.0)
+    jobs = c.scheduler.poll(35.0)
+    assert [j.scheduled_at for j in jobs] == [10.0, 20.0, 30.0]
+    c.scheduler.mark_failed(jobs[0])         # @10 failed; @20/@30 succeeded
+    refire = c.scheduler.poll(36.0)
+    assert [j.scheduled_at for j in refire] == [10.0]
+    assert c.scheduler.poll(37.0) == []
+    # a failed stamp combines with newly due occurrences in one poll
+    c.scheduler.mark_failed(refire[0])
+    combined = c.scheduler.poll(41.0)
+    assert [j.scheduled_at for j in combined] == [10.0, 40.0]
+
+
+def test_scheduler_catchup_is_capped():
+    """An in-process stall must not replay an unbounded backlog: one poll
+    emits at most max_catchup occurrences per (deployment, task), keeping
+    the most recent boundaries."""
+    c = _score_only_castor(every=10.0)
+    c.scheduler.max_catchup = 5
+    c.scheduler.poll(0.0)
+    jobs = c.scheduler.poll(1000.0)          # 100 occurrences missed
+    assert [j.scheduled_at for j in jobs] == \
+        [960.0, 970.0, 980.0, 990.0, 1000.0]
+    assert c.scheduler.poll(1001.0) == []    # dropped ones stay dropped
+
+
+def test_failed_retry_backlog_shares_the_catchup_cap():
+    """A permanently failing deployment re-queues every occurrence; the
+    retry backlog must stay bounded by max_catchup (most recent win)
+    instead of growing by one replayed megabatch per poll forever."""
+    c = _score_only_castor(every=10.0)
+    c.scheduler.max_catchup = 3
+    for j in c.scheduler.poll(0.0):
+        c.scheduler.mark_failed(j)
+    jobs = c.scheduler.poll(35.0)            # retry @0 + new @10/@20/@30
+    assert [j.scheduled_at for j in jobs] == [10.0, 20.0, 30.0]  # capped
+    for j in jobs:
+        c.scheduler.mark_failed(j)
+    jobs = c.scheduler.poll(45.0)            # retries + new @40, capped
+    assert [j.scheduled_at for j in jobs] == [20.0, 30.0, 40.0]
+    for j in jobs:
+        c.scheduler.mark_failed(j)
+    # steady state: the backlog never exceeds the cap
+    assert [j.scheduled_at for j in c.scheduler.poll(46.0)] == \
+        [20.0, 30.0, 40.0]
+
+
+def test_catchup_jobs_bin_separately_per_occurrence():
+    """scheduled_at is part of the bin key: a fleet score bin shares one
+    execution time axis, so catch-up occurrences must not share a bin."""
+    c = _score_only_castor(every=10.0)
+    c.scheduler.poll(0.0)
+    bins = bin_jobs(c.scheduler.poll(35.0))
+    assert len(bins) == 3
+    assert sorted(k[-1] for k in bins) == [10.0, 20.0, 30.0]
+
+
+def test_poll_with_unresolvable_package_loses_no_occurrences():
+    """A raising registry lookup (deployment of a never-published package)
+    must not advance ANY deployment's watermark or drop queued retries —
+    the poll is atomic, so occurrences already processed for healthy
+    deployments are not emitted into a poll that then throws them away."""
+    c = Castor()
+    c.publish("pkg", "1.0", _Dummy)
+    c.add_signal("S")
+    c.add_entity("E")
+    # 'a' sorts before 'z': the healthy deployment is processed FIRST
+    c.deploy(ModelDeployment(name="a", package="pkg", signal="S",
+                             entity="E", train=None,
+                             score=Schedule(0.0, 10.0)))
+    c.deploy(ModelDeployment(name="z", package="ghost", signal="S",
+                             entity="E", train=None,
+                             score=Schedule(0.0, 10.0)))
+    with pytest.raises(KeyError):
+        c.scheduler.poll(5.0)
+    c.publish("ghost", "1.0", _Dummy)
+    jobs = c.scheduler.poll(6.0)
+    assert sorted((j.deployment_name, j.scheduled_at) for j in jobs) == \
+        [("a", 0.0), ("z", 0.0)]
+
+
 def test_job_binning_key():
     j1 = Job("a", "p", "1.0", "score", 0.0, "S", "E1", "k")
     j2 = Job("b", "p", "1.0", "score", 0.0, "S", "E2", "k")
@@ -115,6 +249,25 @@ def test_programmatic_fleet_deployment():
 
 
 # ---------------- lineage ----------------
+def test_version_store_latest_is_by_trained_at_not_save_order():
+    """Catch-up training jobs complete out of chronological order on a
+    parallel executor: 'latest' must mean max trained_at, never whichever
+    save happened to land last."""
+    vs = ModelVersionStore()
+    vs.save("m", {"a": 1}, trained_at=20.0)
+    vs.save("m", {"a": 2}, trained_at=30.0)
+    vs.save("m", {"a": 3}, trained_at=10.0)   # stale boundary finished last
+    assert vs.get("m").trained_at == 30.0
+    assert vs.get("m").params == {"a": 2}
+    # explicit version ids keep save order (artifact identity)
+    assert vs.get("m", version=3).trained_at == 10.0
+    # replay-faithful lookup: newest version trained AT OR BEFORE the
+    # boundary; pre-first-training replays fall back to the oldest
+    assert vs.get("m", at=25.0).trained_at == 20.0
+    assert vs.get("m", at=10.0).trained_at == 10.0
+    assert vs.get("m", at=5.0).trained_at == 10.0
+
+
 def test_prediction_store_append_only_and_ranking():
     ps = PredictionStore()
     t = np.arange(3.0)

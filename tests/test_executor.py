@@ -187,6 +187,214 @@ def test_fleet_equals_local_for_linear():
                                    rtol=1e-4, atol=1e-5)
 
 
+def _mk_castor_late_score(cls, n=6, slow=True):
+    """Like _mk_castor, but scoring first fires at t=1.0 so tick(0.0)
+    trains WITHOUT scoring (keeps per-test score call counts clean)."""
+    c = Castor()
+    c.publish("pkg", "1.0", cls)
+    c.add_signal("S")
+    for i in range(n):
+        name = f"d{i}" + ("slow" if slow and i == 0 else "")
+        c.add_entity(f"E{i}")
+        c.deploy(ModelDeployment(name=name, package="pkg", signal="S",
+                                 entity=f"E{i}", train=Schedule(0.0, 1e9),
+                                 score=Schedule(1.0, 1e9)))
+    return c
+
+
+class _DeadStraggler(ModelInterface):
+    """The straggler's scoring always fails — and its FIRST attempt is slow
+    enough to trigger a speculative backup. Everyone else succeeds fast."""
+    CALLS = {}
+    LOCK = threading.Lock()
+
+    def load(self): pass
+    def transform(self): pass
+    def train(self): return {}
+
+    def score(self, m):
+        with _DeadStraggler.LOCK:
+            n = _DeadStraggler.CALLS.get(self.model_id, 0)
+            _DeadStraggler.CALLS[self.model_id] = n + 1
+        if self.model_id.endswith("slow"):
+            if n == 0:
+                time.sleep(0.6)
+            raise RuntimeError("permanently dead")
+        return np.arange(2.0), np.ones(2)
+
+
+def test_retry_budget_is_per_job_not_per_copy_chain():
+    """Regression: a speculative backup was submitted with attempt n+1 and
+    could itself be retried, so one job consumed max_retries twice. The
+    budget is per job index: at most 1 + max_retries executions total,
+    backups included."""
+    _DeadStraggler.CALLS = {}
+    c = _mk_castor_late_score(_DeadStraggler, n=6, slow=True)
+    c.tick(0.0, executor="local")                    # trains only
+    ex = LocalPoolExecutor(c, max_parallel=8, max_retries=2,
+                           straggler_min_s=0.1, straggler_factor=2.0)
+    res = ex.run(c.scheduler.poll(1.0))
+    slow = [r for r in res if r.job.deployment_name == "d0slow"]
+    assert len(slow) == 1 and not slow[0].ok
+    assert _DeadStraggler.CALLS["d0slow"] == 3      # 1 + max_retries, EXACTLY
+    assert slow[0].attempts == 3
+
+
+class _SlowPrimaryFastBackup(ModelInterface):
+    """The straggler's first score copy sleeps; every later copy returns
+    instantly — the speculative backup should win."""
+    CALLS = {}
+    LOCK = threading.Lock()
+
+    def load(self): pass
+    def transform(self): pass
+    def train(self): return {}
+
+    def score(self, m):
+        with _SlowPrimaryFastBackup.LOCK:
+            n = _SlowPrimaryFastBackup.CALLS.get(self.model_id, 0)
+            _SlowPrimaryFastBackup.CALLS[self.model_id] = n + 1
+        if self.model_id.endswith("slow") and n == 0:
+            time.sleep(1.2)
+        return np.arange(2.0), np.ones(2)
+
+
+def test_speculative_win_flag_set_only_for_winning_backup():
+    _SlowPrimaryFastBackup.CALLS = {}
+    c = _mk_castor_late_score(_SlowPrimaryFastBackup, n=6, slow=True)
+    c.tick(0.0, executor="local")                    # trains only
+    ex = LocalPoolExecutor(c, max_parallel=8, max_retries=1,
+                           straggler_min_s=0.1, straggler_factor=2.0)
+    res = ex.run(c.scheduler.poll(1.0))
+    assert all(r.ok for r in res)
+    by_name = {r.job.deployment_name: r for r in res}
+    assert by_name["d0slow"].speculative_win        # the backup copy won
+    assert not any(r.speculative_win for n, r in by_name.items()
+                   if n != "d0slow")
+
+
+def test_fleet_partial_bin_scores_trained_excludes_missing():
+    """One deployment with no trained version must fail ALONE: the rest of
+    the bin scores normally (regression: the whole bin used to fail)."""
+    c = _smartgrid(6)
+    from repro.core import ModelDeployment
+    c.deploy(ModelDeployment(
+        name="cold", package="lr", signal="ENERGY_LOAD", entity="T_PRO_0_0",
+        train=None, score=Schedule(35 * 86400.0, 1e9),
+        user_params={"train_window_days": 14}))
+    fx = FleetExecutor(c)
+    res = fx.run(c.scheduler.poll(35 * 86400.0))
+    by_name = {r.job.deployment_name: r for r in res
+               if r.job.task == "score"}
+    assert not by_name["cold"].ok
+    assert "no trained version" in by_name["cold"].error
+    assert all(r.ok for n, r in by_name.items() if n != "cold")
+    for i in range(6):
+        assert len(c.predictions.history(f"m-T_PRO_0_{i}")) == 1
+    # the scored bin ran as one megabatch of the 6 trained instances
+    score_bins = [b for b in fx.last_bin_stats if "'score'" in b["bin"]]
+    assert [b["jobs"] for b in score_bins] == [6]
+    # only the truly-missing job re-fires (at-least-once per job)
+    refire = c.scheduler.poll(35 * 86400.0 + 1.0)
+    assert [j.deployment_name for j in refire] == ["cold"]
+
+
+def test_fleet_run_phases_trains_before_scores():
+    """FleetExecutor.run must phase train bins before score bins itself,
+    not rely on callers passing pre-sorted jobs."""
+    c = _smartgrid(4)
+    jobs = list(reversed(c.scheduler.poll(35 * 86400.0)))   # scores FIRST
+    assert jobs[0].task == "score"
+    res = FleetExecutor(c).run(jobs)
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    for i in range(4):
+        assert len(c.predictions.history(f"m-T_PRO_0_{i}")) == 1
+
+
+def test_non_fleet_fallback_pools_across_staggered_bins():
+    """Non-fleet jobs with distinct scheduled_at (staggered schedules or
+    catch-up) fragment into separate bins — but the local-pool fallback
+    must still receive them as ONE run per phase, not one sequential
+    single-job run per bin."""
+    class _Plain(ModelInterface):
+        def load(self): pass
+        def transform(self): pass
+        def train(self): return {"ok": True}
+        def score(self, m): return np.arange(2.0), np.ones(2)
+
+    c = Castor()
+    c.publish("plain", "1.0", _Plain)
+    c.add_signal("S")
+    for i in range(4):
+        c.add_entity(f"E{i}")
+        c.deploy(ModelDeployment(name=f"p{i}", package="plain", signal="S",
+                                 entity=f"E{i}",
+                                 train=Schedule(i * 10.0, 1e9),
+                                 score=Schedule(i * 10.0, 1e9)))
+    jobs = c.scheduler.poll(100.0)
+    assert len({j.scheduled_at for j in jobs}) == 4   # staggered boundaries
+    fx = FleetExecutor(c)
+    calls = []
+    orig = fx.fallback.run
+    fx.fallback.run = lambda js: calls.append(len(js)) or orig(js)
+    res = fx.run(jobs)
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    assert calls == [4, 4]        # one pooled run per phase, not 8 bins
+
+
+def test_catchup_tick_persists_forecasts_at_boundaries():
+    """End-to-end: a late tick covering K missed score occurrences persists
+    K forecasts, each created_at its scheduled boundary (Castor lineage)."""
+    HOUR = 3600.0
+    from repro.timeseries.ingest import SiteSpec, build_site
+    c = Castor()
+    build_site(c, SiteSpec("C", n_prosumers=2, n_feeders=1,
+                           n_substations=1, seed=2),
+               t0=0.0, t1=40 * 86400.0)
+    now = 35 * 86400.0
+    c.publish("lr", "1.0", LinearForecaster)
+    c.deploy_for_all(package="lr", signal="ENERGY_LOAD", name_prefix="c",
+                     kind="PROSUMER", train=Schedule(now, 1e12),
+                     score=Schedule(now, HOUR),
+                     user_params={"train_window_days": 14})
+    assert all(r.ok for r in c.tick(now, executor="fleet"))
+    # the poller was down for 3 hours: one late tick catches up
+    res = c.tick(now + 3 * HOUR, executor="fleet")
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    fc = c.predictions.history("c-C_PRO_0_0")
+    assert [f.created_at for f in fc] == [now, now + HOUR, now + 2 * HOUR,
+                                          now + 3 * HOUR]
+    for f in fc:                      # horizons roll from the DUE time
+        assert f.times[0] == f.created_at
+
+
+def test_catchup_scoring_uses_contemporaneous_versions():
+    """Replay fidelity: when BOTH train and score catch up, each forecast
+    must record the model version a live poller would have had at its
+    boundary — never a version trained on data observed later."""
+    HOUR = 3600.0
+    from repro.timeseries.ingest import SiteSpec, build_site
+    c = Castor()
+    build_site(c, SiteSpec("D", n_prosumers=2, n_feeders=1,
+                           n_substations=1, seed=2),
+               t0=0.0, t1=40 * 86400.0)
+    now = 35 * 86400.0
+    c.publish("lr", "1.0", LinearForecaster)
+    c.deploy_for_all(package="lr", signal="ENERGY_LOAD", name_prefix="d",
+                     kind="PROSUMER", train=Schedule(now, HOUR),
+                     score=Schedule(now, HOUR),
+                     user_params={"train_window_days": 14})
+    assert all(r.ok for r in c.tick(now, executor="fleet"))
+    res = c.tick(now + 3 * HOUR, executor="fleet")   # 3h poller stall
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    name = "d-D_PRO_0_0"
+    versions = {v.version: v.trained_at for v in c.versions.history(name)}
+    for f in c.predictions.history(name):
+        # the forecast's model was trained AT its own boundary, not later
+        assert versions[f.model_version] == f.created_at, \
+            (f.created_at, f.model_version, versions)
+
+
 def test_fleet_bins_execute_as_one(capsys):
     c = _smartgrid()
     ex = FleetExecutor(c)

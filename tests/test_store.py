@@ -328,9 +328,11 @@ def test_empty_window_equivalent_across_executors():
     np.testing.assert_allclose(f.values, l.values, rtol=1e-5, atol=1e-6)
 
 
-def test_fleet_bin_mixing_execution_times_fails_loudly():
-    """Jobs from different polls share a bin_key; batching them would
-    silently skew calendar features — the fleet hooks must refuse."""
+def test_fleet_bins_split_by_execution_time():
+    """Jobs from different polls carry different scheduled_at and a fleet
+    score bin shares ONE execution time axis — scheduled_at is part of the
+    bin key, so mixed-poll jobs execute as separate bins, each stamped at
+    its own time (batching them would silently skew calendar features)."""
     c = _small_castor(2)
     now = 28 * DAY
     c.publish("lr", "1.0", LinearForecaster)
@@ -341,9 +343,30 @@ def test_fleet_bin_mixing_execution_times_fails_loudly():
     assert all(r.ok for r in c.tick(now, executor="fleet"))
     mixed = c.scheduler.poll(now + HOUR) + c.scheduler.poll(now + 2 * HOUR)
     assert len({j.scheduled_at for j in mixed}) == 2
-    res = FleetExecutor(c).run(mixed)
-    assert all(not r.ok for r in res)
-    assert all("mixes execution times" in r.error for r in res)
+    fx = FleetExecutor(c)
+    res = fx.run(mixed)
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    assert len(fx.last_bin_stats) == 2          # one bin per poll time
+    for i in range(2):
+        created = [f.created_at for f in c.predictions.history(f"m-P{i}")]
+        assert created == [now, now + HOUR, now + 2 * HOUR]
+
+
+def test_fleet_score_mixed_now_instances_fail_loudly():
+    """Model-layer backstop behind the bin split: calling fleet_score
+    directly on instances with mixed execution times must refuse rather
+    than silently compute wrong calendar features."""
+    c = _small_castor(2)
+    now = 28 * DAY
+    up = {"train_window_days": 7, "now": now}
+    insts = [LinearForecaster(
+        context=c.graph.context("ENERGY_LOAD", f"P{i}"), task="score",
+        model_id=f"x{i}", model_version=None,
+        user_params={**up, "now": now + i * HOUR}, system=c)
+        for i in range(2)]
+    trained = LinearForecaster.fleet_train(insts)
+    with pytest.raises(RuntimeError, match="mixes execution times"):
+        LinearForecaster.fleet_score(insts, trained)
 
 
 def test_castor_semantic_read_many():
