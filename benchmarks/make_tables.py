@@ -11,6 +11,30 @@ from .bench_roofline import rows_from_artifacts
 
 ART = Path("artifacts/dryrun")
 FLEET_ART = Path("artifacts/table3_fleet_bins.json")
+STEADY_ART = Path("BENCH_steady_state.json")
+
+
+def steady_state_table() -> str:
+    """Cold vs warm poll latency from the steady-state benchmark artifact
+    (benchmarks.bench_steady_state — persisted so the perf trajectory
+    survives across PRs)."""
+    if not STEADY_ART.exists():
+        return "_no BENCH_steady_state.json — run " \
+               "`python -m benchmarks.bench_steady_state` first_"
+    r = json.loads(STEADY_ART.read_text())
+    tag = " (SMOKE: small fleet, ungated)" if r.get("smoke") else ""
+    return "\n".join([
+        f"Steady-state fleet polls at N={r['n']}{tag}: warm poll "
+        f"**{r['speedup']:.1f}x** faster than cold "
+        f"(min of {r['reps']} reps, single-threaded XLA).",
+        "",
+        "| poll | latency (ms) | store work |",
+        "|---|---|---|",
+        f"| cold (full-window reload) | {r['cold_poll_s'] * 1e3:.1f} "
+        f"| O(history) read + realign + re-stack |",
+        f"| warm (FleetRuntime) | {r['warm_poll_s'] * 1e3:.1f} "
+        f"| O(delta) watermark read, 0 retraces |",
+    ])
 
 
 def fleet_shard_table() -> str:
@@ -98,3 +122,5 @@ if __name__ == "__main__":
     print(roofline_table("pod"))
     print("\n### Sharded fleet bins (Table-3 device sweep)\n")
     print(fleet_shard_table())
+    print("\n### Steady-state poll hot path\n")
+    print(steady_state_table())

@@ -59,16 +59,30 @@ class Castor:
     # ---------------- (7)-(10) execution ----------------
     def tick(self, now: float, *, executor: str = "fleet",
              max_parallel: int = 16) -> List[JobResult]:
-        """One scheduler cycle: poll due jobs, execute, persist."""
+        """One scheduler cycle: poll due jobs, execute, persist.
+
+        The fleet executor PERSISTS across ticks: its ``FleetRuntime``
+        keeps each bin's feature state device-resident, so consecutive
+        polls pay O(delta) instead of O(history) (see core/runtime.py).
+        The local pool is stateless and built per call."""
         jobs = self.scheduler.poll(now)
         if not jobs:
             return []
         if executor == "fleet":
-            ex = FleetExecutor(self, fallback=LocalPoolExecutor(
-                self, max_parallel=max_parallel))
+            ex = self.fleet_executor(max_parallel=max_parallel)
         else:
             ex = LocalPoolExecutor(self, max_parallel=max_parallel)
         return ex.run(jobs)
+
+    def fleet_executor(self, *, max_parallel: int = 16) -> FleetExecutor:
+        """The system's long-lived fleet executor (steady-state runtime
+        state lives here); rebuilt only if the pool size changes."""
+        cached = getattr(self, "_fleet_ex", None)
+        if cached is None or cached[0] != max_parallel:
+            ex = FleetExecutor(self, fallback=LocalPoolExecutor(
+                self, max_parallel=max_parallel))
+            self._fleet_ex = cached = (max_parallel, ex)
+        return cached[1]
 
     def run_until(self, t0: float, t1: float, step: float,
                   executor: str = "fleet") -> List[JobResult]:

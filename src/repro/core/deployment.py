@@ -39,21 +39,29 @@ class ModelDeployment:
 class DeploymentStore:
     def __init__(self):
         self._deps: Dict[str, ModelDeployment] = {}
+        self._sorted: Optional[List[ModelDeployment]] = None
 
     def register(self, dep: ModelDeployment) -> ModelDeployment:
         if dep.name in self._deps:
             raise ValueError(f"deployment {dep.name} already registered")
         self._deps[dep.name] = dep
+        self._sorted = None
         return dep
 
     def remove(self, name: str):
         self._deps.pop(name, None)
+        self._sorted = None
 
     def get(self, name: str) -> ModelDeployment:
         return self._deps[name]
 
     def all(self) -> List[ModelDeployment]:
-        return sorted(self._deps.values(), key=lambda d: d.name)
+        # the scheduler walks every deployment every poll: cache the sort
+        # (invalidated on register/remove) instead of re-sorting a
+        # thousands-strong fleet each cycle
+        if self._sorted is None:
+            self._sorted = sorted(self._deps.values(), key=lambda d: d.name)
+        return list(self._sorted)
 
     def for_context(self, signal: str, entity: str) -> List[ModelDeployment]:
         """All models deployed against one context, rank-sorted (Fig. 5)."""

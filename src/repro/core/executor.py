@@ -65,11 +65,20 @@ class _ExecBase:
         self.system = system
 
     # ------------- single-job execution (shared) -------------
-    def _instantiate(self, job: Job) -> ModelInterface:
-        cls = self.system.registry.get(job.package, job.version)
+    _UNSET = object()
+
+    def _instantiate(self, job: Job, latest=_UNSET,
+                     cls=None) -> ModelInterface:
+        """``latest``/``cls`` let callers that already resolved the model
+        version or implementation class (the fleet bin path — shared
+        across the whole bin) skip per-job registry/store lookups; the
+        instance's ``model_version`` attribute is informational."""
+        if cls is None:
+            cls = self.system.registry.get(job.package, job.version)
         ctx = self.system.graph.context(job.signal, job.entity)
         dep = self.system.deployments.get(job.deployment_name)
-        latest = self.system.versions.get(job.deployment_name)
+        if latest is _ExecBase._UNSET:
+            latest = self.system.versions.get(job.deployment_name)
         up = dict(dep.user_params)
         # execution-time parameter: the poll's timestamp must ALWAYS win —
         # a stray "now" in a deployment's user_params would otherwise pin
@@ -208,6 +217,14 @@ class LocalPoolExecutor(_ExecBase):
 class FleetExecutor(_ExecBase):
     """TPU-native megabatched execution: one computation per job bin.
 
+    Steady state: the executor owns a persistent ``FleetRuntime``
+    (core/runtime.py) that keeps each bin's feature state device-resident
+    across polls — a warm poll costs O(delta), not O(history). Per-bin
+    telemetry (``runtime``/``cache_hit``/``delta_rows``/``retraces``/
+    rollout-cache hits+misses) lands in ``last_bin_stats``; opt out per
+    deployment with ``user_params["runtime"] = "off"`` or executor-wide
+    with ``runtime="off"``.
+
     Mesh sharding: with >1 jax device the bin's instance axis is partitioned
     across a 1-D fleet mesh via shard_map (``launch.mesh.make_fleet_mesh``) —
     still ONE dispatch per bin, each device training/scoring its N/ndev
@@ -219,10 +236,15 @@ class FleetExecutor(_ExecBase):
     """
 
     def __init__(self, system, *, fallback: Optional[LocalPoolExecutor] = None,
-                 mesh: str = "auto"):
+                 mesh: str = "auto", runtime: str = "auto"):
         super().__init__(system)
         self.fallback = fallback or LocalPoolExecutor(system, max_parallel=8)
         self.mesh = mesh                 # "auto" | "off"
+        if runtime == "off":
+            self.runtime = None
+        else:
+            from .runtime import FleetRuntime
+            self.runtime = FleetRuntime(system)
         self.last_bin_stats: List[dict] = []
 
     def run(self, jobs: List[Job]) -> List[JobResult]:
@@ -306,10 +328,22 @@ class FleetExecutor(_ExecBase):
         mesh = self._bin_mesh(bin_jobs_)
         ndev = len(mesh.devices.flat) if mesh is not None else 1
         pad = (-len(bin_jobs_)) % ndev
-        instances = [self._instantiate(j) for j in bin_jobs_]
+        if task == "train":
+            instances = [self._instantiate(j, cls=cls) for j in bin_jobs_]
+        else:       # versions already resolved above: no second lookup
+            instances = [self._instantiate(j, latest=mv, cls=cls)
+                         for j, mv in zip(bin_jobs_, latests)]
+        from ..forecast.base import rollout_cache_stats
+        from ..forecast.features import trace_count
+        kw = {"mesh": mesh}
+        if self.runtime is not None and getattr(cls, "SUPPORTS_RUNTIME",
+                                                False):
+            kw["runtime"] = self.runtime
+        tr0, rc0 = trace_count(), rollout_cache_stats()
+        dr0 = getattr(store, "delta_read_count", 0)
         try:
             if task == "train":
-                model_objs = cls.fleet_train(instances, mesh=mesh)
+                model_objs = cls.fleet_train(instances, **kw)
                 for j, mo in zip(bin_jobs_, model_objs):
                     self.system.versions.save(
                         j.deployment_name, mo, trained_at=j.scheduled_at,
@@ -318,27 +352,42 @@ class FleetExecutor(_ExecBase):
             else:
                 preds = cls.fleet_score(instances,
                                         [l.params for l in latests],
-                                        mesh=mesh)
-                for j, l, (times, values) in zip(bin_jobs_, latests, preds):
-                    dep = self.system.deployments.get(j.deployment_name)
-                    self.system.predictions.save(Forecast(
-                        deployment_name=j.deployment_name, signal=j.signal,
-                        entity=j.entity, created_at=j.scheduled_at,
-                        times=np.asarray(times), values=np.asarray(values),
-                        model_version=l.version, rank=dep.rank))
+                                        **kw)
+                self.system.predictions.save_many([Forecast(
+                    deployment_name=j.deployment_name, signal=j.signal,
+                    entity=j.entity, created_at=j.scheduled_at,
+                    times=times if isinstance(times, np.ndarray)
+                    else np.asarray(times),
+                    values=values if isinstance(values, np.ndarray)
+                    else np.asarray(values),
+                    model_version=l.version,
+                    rank=self.system.deployments.get(j.deployment_name).rank)
+                    for j, l, (times, values)
+                    in zip(bin_jobs_, latests, preds)])
             dt = time.perf_counter() - t0
             per = dt / max(len(bin_jobs_), 1)
             out.extend(JobResult(j, True, per) for j in bin_jobs_)
-            self.last_bin_stats.append(
-                {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt,
-                 "read_many_calls":
-                     getattr(store, "read_many_count", 0) - rm0,
-                 "single_reads": getattr(store, "read_count", 0) - r0,
-                 "sharded": mesh is not None, "mesh_devices": ndev,
-                 "pad": pad, "dispatches": 1})
+            rc1 = rollout_cache_stats()
+            stats = {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt,
+                     "read_many_calls":
+                         getattr(store, "read_many_count", 0) - rm0,
+                     "single_reads": getattr(store, "read_count", 0) - r0,
+                     "delta_reads":
+                         getattr(store, "delta_read_count", 0) - dr0,
+                     "sharded": mesh is not None, "mesh_devices": ndev,
+                     "pad": pad, "dispatches": 1,
+                     "retraces": trace_count() - tr0,
+                     "rollout_cache_hits": rc1["hits"] - rc0["hits"],
+                     "rollout_cache_misses": rc1["misses"] - rc0["misses"],
+                     "runtime": "off", "cache_hit": False, "delta_rows": 0}
+            if self.runtime is not None:
+                stats.update(self.runtime.pop_stats())
+            self.last_bin_stats.append(stats)
         except Exception as e:  # noqa: BLE001
             dt = time.perf_counter() - t0
             err = f"{type(e).__name__}: {e}"
+            if self.runtime is not None:
+                self.runtime.pop_stats()        # don't leak into next bin
             out.extend(self._fail(j, dt / len(bin_jobs_), err)
                        for j in bin_jobs_)
         return out

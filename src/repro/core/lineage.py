@@ -31,6 +31,7 @@ class ModelVersionStore:
 
     def __init__(self):
         self._versions: Dict[str, List[ModelVersion]] = {}
+        self._latest: Dict[str, ModelVersion] = {}   # max trained_at memo
         self._lock = threading.Lock()
 
     def save(self, model_id: str, params, trained_at: float,
@@ -43,6 +44,10 @@ class ModelVersionStore:
             mv = ModelVersion(model_id, len(hist) + 1, trained_at, params,
                               dict(metadata or {}))
             hist.append(mv)
+            cur = self._latest.get(model_id)
+            if cur is None or (mv.trained_at, mv.version) > \
+                    (cur.trained_at, cur.version):
+                self._latest[model_id] = mv
             return mv
 
     def get(self, model_id: str, version: Optional[int] = None, *,
@@ -63,11 +68,14 @@ class ModelVersionStore:
             return None
         if version is not None:
             return hist[version - 1]
+        latest = self._latest[model_id]
+        # steady-state fast path: a live poller's `at` is at/after the
+        # newest training, so the memoized latest answers without a scan
+        if at is None or latest.trained_at <= at:
+            return latest
         key = lambda mv: (mv.trained_at, mv.version)   # noqa: E731
-        if at is not None:
-            eligible = [mv for mv in hist if mv.trained_at <= at]
-            return max(eligible, key=key) if eligible else min(hist, key=key)
-        return max(hist, key=key)
+        eligible = [mv for mv in hist if mv.trained_at <= at]
+        return max(eligible, key=key) if eligible else min(hist, key=key)
 
     def history(self, model_id: str) -> List[ModelVersion]:
         return list(self._versions.get(model_id, ()))
@@ -103,14 +111,25 @@ class PredictionStore:
         self._lock = threading.Lock()
 
     def save(self, fc: Forecast) -> Forecast:
-        key = (fc.deployment_name, float(fc.created_at))
         with self._lock:
-            if key in self._seen:                    # duplicate execution
-                return fc
-            self._seen.add(key)
-            self._by_dep.setdefault(fc.deployment_name, []).append(fc)
-            self._by_ctx.setdefault((fc.signal, fc.entity), []).append(fc)
+            self._save_locked(fc)
         return fc
+
+    def save_many(self, fcs: List[Forecast]) -> None:
+        """One lock acquisition for a whole fleet bin's forecasts — the
+        scoring analogue of ``TimeSeriesStore.read_many`` (N per-forecast
+        lock round-trips were measurable at steady state)."""
+        with self._lock:
+            for fc in fcs:
+                self._save_locked(fc)
+
+    def _save_locked(self, fc: Forecast) -> None:
+        key = (fc.deployment_name, float(fc.created_at))
+        if key in self._seen:                        # duplicate execution
+            return
+        self._seen.add(key)
+        self._by_dep.setdefault(fc.deployment_name, []).append(fc)
+        self._by_ctx.setdefault((fc.signal, fc.entity), []).append(fc)
 
     def history(self, deployment_name: str) -> List[Forecast]:
         """Full lineage — every rolling-horizon forecast ever produced."""

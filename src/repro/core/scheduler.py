@@ -84,6 +84,27 @@ class ModelScheduler:
         self.max_catchup = max_catchup
         self._last: Dict[Tuple[str, str], float] = {}
         self._failed: Dict[Tuple[str, str], set] = {}   # scheduled_at stamps
+        # next boundary due, memoized WITH the schedule that computed it:
+        # a redeployed/edited schedule (Schedule is a frozen value type)
+        # fails the equality check and falls back to the full boundary
+        # arithmetic, so the fast path can never suppress a changed cadence
+        self._next: Dict[Tuple[str, str], Tuple[Schedule, float]] = {}
+        # params-key memo per user_params dict identity: repr-ing every
+        # deployment's params dict on every poll was measurable on the
+        # steady-state hot path. The memo holds a snapshot COPY and
+        # re-validates with a (cheap) dict equality, so both a swapped
+        # dict (new id) and an in-place mutation recompute the key.
+        self._pk: Dict[int, Tuple[dict, str]] = {}
+
+    def _params_key(self, params: dict) -> str:
+        hit = self._pk.get(id(params))
+        if hit is not None and hit[0] == params:
+            return hit[1]
+        if len(self._pk) > 4096:
+            self._pk.clear()
+        k = _params_key(params)
+        self._pk[id(params)] = (dict(params), k)
+        return k
 
     def poll(self, now: float) -> List[Job]:
         """The poll is ATOMIC: watermarks advance and queued retries clear
@@ -99,6 +120,15 @@ class ModelScheduler:
                 if sched is None:
                     continue
                 key = (dep.name, task)
+                # steady-state fast path: nothing due and nothing queued
+                # for retry — skip the boundary arithmetic entirely (a
+                # large fleet walks every (deployment, task) per poll).
+                # Only valid while the schedule that computed the memoized
+                # boundary is still the deployment's schedule.
+                nxt = self._next.get(key)
+                if nxt is not None and nxt[0] == sched and now < nxt[1] \
+                        and key not in self._failed:
+                    continue
                 # one job PER missed occurrence, stamped at its scheduled
                 # boundary — forecasts and model versions must carry
                 # lineage timestamps of when the work was DUE, not
@@ -116,18 +146,22 @@ class ModelScheduler:
                     # chronological: queued retries predate new ones)
                     stamps = stamps[-self.max_catchup:]
                 version = self.registry.resolve_version(dep.package, dep.version)
-                planned.append((dep, task, key, stamps, bool(new), version))
+                planned.append((dep, task, key, sched, stamps, bool(new),
+                                version))
         # every lookup succeeded: commit state and emit
-        for dep, task, key, stamps, advance, version in planned:
+        for dep, task, key, sched, stamps, advance, version in planned:
             self._failed.pop(key, None)
             if advance:
                 self._last[key] = now
+                k_now = int((now - sched.start) // sched.every)
+                self._next[key] = (sched,
+                                   sched.start + (k_now + 1) * sched.every)
             for ts in dict.fromkeys(stamps):
                 jobs.append(Job(
                     deployment_name=dep.name, package=dep.package,
                     version=version, task=task, scheduled_at=ts,
                     signal=dep.signal, entity=dep.entity,
-                    user_params_key=_params_key(dep.user_params)))
+                    user_params_key=self._params_key(dep.user_params)))
         # deterministic order: training before scoring, then chronological
         # (catch-up occurrences execute oldest first), then by name
         jobs.sort(key=lambda j: (j.task != "train", j.scheduled_at,

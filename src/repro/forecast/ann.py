@@ -13,6 +13,7 @@ import numpy as np
 
 from ..kernels.fleet_mlp.ops import fleet_mlp
 from .base import ForecastModelBase
+from .features import bucket_n, edge_pad, note_trace
 
 N_HIDDEN_LAYERS = 4
 
@@ -48,6 +49,7 @@ def _loss(params, X, y, y_scale):
 
 @partial(jax.jit, static_argnames=("epochs", "width", "lr"))
 def _fit_jax(key, X, y, y_scale, *, epochs: int, width: int, lr: float):
+    note_trace()                     # Python body runs only while tracing
     params = _init(key, X.shape[-1], width)
     opt = jax.tree_util.tree_map(lambda p: (jnp.zeros_like(p),) * 2, params)
 
@@ -122,8 +124,12 @@ class ANNForecaster(ForecastModelBase):
         width = int(up["hidden"])
         epochs, lr = int(up["epochs"]), float(up["lr"])
         N = X.shape[0]
+        # per-instance keys drawn at the TRUE bin size (bucket padding must
+        # never shift which key a real instance trains with), then padded
+        # to the size bucket so nearby bin sizes share one compilation
         keys = jax.random.split(jax.random.PRNGKey(int(rng.integers(2**31))), N)
-        ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
+        ys = np.abs(np.asarray(y)).max(axis=1) * 1.2 + 1e-6
+        pad = bucket_n(N) - N
         if mesh is None:
             fit = partial(_fit_fleet, epochs=epochs, width=width, lr=lr)
         else:
@@ -131,13 +137,14 @@ class ANNForecaster(ForecastModelBase):
             fit = fleet_sharded(
                 partial(_fit_fleet_vmapped, epochs=epochs, width=width, lr=lr),
                 mesh, key=("ann_fit", epochs, width, lr))
-        params = fit(keys, jnp.asarray(X, jnp.float32),
-                     jnp.asarray(y, jnp.float32),
-                     jnp.asarray(ys, jnp.float32))
+        params = fit(edge_pad(keys, pad),
+                     edge_pad(jnp.asarray(X, jnp.float32), pad),
+                     edge_pad(jnp.asarray(y, jnp.float32), pad),
+                     edge_pad(jnp.asarray(ys, jnp.float32), pad))
         out = {}
         for i, w in enumerate(params["w"]):
-            out[f"w{i}"] = np.asarray(w)
-            out[f"b{i}"] = np.asarray(params["b"][i])
+            out[f"w{i}"] = w[:N]
+            out[f"b{i}"] = params["b"][i][:N]
         out["y_scale"] = ys
         return out
 

@@ -10,25 +10,79 @@ weather_lags, plus model-specific extras (hidden, epochs, lr, ...).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.registry import ModelInterface
 from ..timeseries.transforms import DAY, HOUR, calendar_phases
-from .features import (FeatureSpec, design_matrix, fleet_hourly_series,
-                       make_device_rollout, recursive_forecast)
+from .features import (FeatureSpec, bucket_n, design_matrix, edge_pad,
+                       fleet_hourly_series, make_device_rollout,
+                       recursive_forecast)
+
+
+class _LRUCache:
+    """Bounded LRU for compiled program caches, with hit/miss counters.
+
+    The rollout cache used to grow without limit across (class, spec,
+    horizon, statics, mesh) configurations — a long-lived server cycling
+    through many deployment configs would pin every compilation forever.
+    Eviction drops our reference; jax's own executable cache is keyed by
+    the function object, so the next use of an evicted config recompiles.
+    """
+
+    def __init__(self, cap: int = 32):
+        self.cap = int(cap)
+        self._d: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        fn = self._d.get(key)
+        if fn is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return fn
+
+    def put(self, key, fn):
+        self._d[key] = fn
+        self._d.move_to_end(key)
+        while len(self._d) > self.cap:
+            self._d.popitem(last=False)
+        return fn
+
+    def __len__(self):
+        return len(self._d)
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "cap": self.cap,
+                "hits": self.hits, "misses": self.misses}
+
 
 #: compiled whole-horizon rollouts, keyed by
 #: (model class, FeatureSpec, horizon, class-specific statics, mesh) — one
-#: trace per configuration, reused across every score bin of that shape.
-#: mesh=None is the single-device jit; a fleet mesh gets its own sharded
-#: compilation (jax Mesh objects hash by devices+axes).
-_ROLLOUT_CACHE: Dict[tuple, Callable] = {}
+#: trace per configuration, reused across every score bin of that shape
+#: bucket. mesh=None is the single-device jit; a fleet mesh gets its own
+#: sharded compilation (jax Mesh objects hash by devices+axes). LRU-bounded
+#: (see _LRUCache); hit/miss counters surface per bin via
+#: ``FleetExecutor.last_bin_stats``.
+_ROLLOUT_CACHE = _LRUCache(cap=32)
+
+
+def rollout_cache_stats() -> dict:
+    return _ROLLOUT_CACHE.stats()
 
 
 class ForecastModelBase(ModelInterface):
     DEFAULTS = {"train_window_days": 28, "horizon": 24}
+    #: the fleet hooks accept a ``runtime=`` kwarg (FleetRuntime): the
+    #: executor only threads its runtime through classes advertising this,
+    #: so third-party SUPPORTS_FLEET implementations with the old
+    #: signature keep working
+    SUPPORTS_RUNTIME = True
 
     # ------------- paper 4-function workflow -------------
     def load(self):
@@ -93,13 +147,28 @@ class ForecastModelBase(ModelInterface):
                 (inst, spec, now))
         for (t0, t1, step), members in groups.items():
             ctxs = [m[0].context for m in members]
-            grid, targets = fleet_hourly_series(
-                members[0][0].system, ctxs, t0, t1, step)
-            for (inst, spec, now), target in zip(members, targets):
-                ent = inst.context.entity
-                temps = inst.system.weather.forecast(
-                    ent.lat, ent.lon, t0, grid) if spec.use_weather \
-                    else np.zeros_like(grid)
+            system = members[0][0].system
+            grid, targets = fleet_hourly_series(system, ctxs, t0, t1, step)
+            # ONE vectorized weather call per bin group, not O(N) python
+            # calls on the hot path (temperature_many rows are bitwise the
+            # per-instance calls, so nothing downstream can tell). History
+            # weather is the OBSERVED temperature (paper §4.2 trains on
+            # observed weather); only the scoring horizon uses forecasts,
+            # issued at scoring time. Observed history is also what makes
+            # the steady-state runtime O(delta): a forecast issued at the
+            # sliding window start would change EVERY value each poll.
+            widx = [i for i, m in enumerate(members) if m[1].use_weather]
+            if widx:
+                ents = [members[i][0].context.entity for i in widx]
+                wtemps = system.weather.temperature_many(
+                    [e.lat for e in ents], [e.lon for e in ents], grid)
+            temps_rows: Dict[int, np.ndarray] = {
+                i: wtemps[j] for j, i in enumerate(widx)}
+            for i, ((inst, spec, now), target) in enumerate(
+                    zip(members, targets)):
+                temps = temps_rows.get(i)
+                if temps is None:
+                    temps = np.zeros_like(grid)
                 inst._loaded = (spec, grid, target, temps, now)
 
     @classmethod
@@ -128,40 +197,63 @@ class ForecastModelBase(ModelInterface):
         return (np.stack(Xs), np.stack(ys), np.stack(mus), np.stack(sds))
 
     @classmethod
-    def fleet_train(cls, instances: List[ModelInterface], *, mesh=None):
-        X, y, mu, sd = cls._fleet_xy(instances)
+    def fleet_train(cls, instances: List[ModelInterface], *, mesh=None,
+                    runtime=None):
+        state = loaded = None
+        if runtime is not None:
+            loaded = runtime.fleet_xy(cls, instances)
+        if loaded is None:               # cold / runtime opted out
+            X, y, mu, sd = cls._fleet_xy(instances)
+        else:                            # device-resident incremental path
+            X, y, mu, sd, state = loaded
         rng = np.random.default_rng(12345)
         # jobs in a bin share user_params_key, so the first instance's
         # merged params speak for the whole bin (hardcoding defaults here
         # is the fleet/local divergence bug this signature prevents)
         up = {**cls.DEFAULTS, **instances[0].user_params}
         params = cls._fleet_fit(X, y, rng, up, mesh=mesh)   # stacked params
+        # ONE host transfer per parameter (persistence needs numpy); the
+        # train->score handoff below keeps the stacked DEVICE params so a
+        # same-poll score bin never re-uploads what training just computed
+        host = {k: np.asarray(v) for k, v in params.items()}
+        mu_h, sd_h = np.asarray(mu), np.asarray(sd)
+        ymax = np.asarray(np.abs(np.asarray(y)).max(axis=1))
         out = []
         for i, inst in enumerate(instances):
-            pi = {k: np.asarray(v[i]) for k, v in params.items()}
-            out.append({"kind": cls.KIND, "params": pi, "mu": mu[i],
-                        "sd": sd[i], "y_scale": float(np.abs(y[i]).max() + 1e-6)})
+            pi = {k: v[i] for k, v in host.items()}
+            out.append({"kind": cls.KIND, "params": pi, "mu": mu_h[i],
+                        "sd": sd_h[i], "y_scale": float(ymax[i] + 1e-6)})
+        if state is not None:
+            runtime.note_trained(state, params, mu, sd, out)
         return out
 
     @classmethod
     def fleet_score(cls, instances: List[ModelInterface], model_objects, *,
-                    mesh=None):
+                    mesh=None, runtime=None):
+        if runtime is not None:
+            res = runtime.fleet_score(cls, instances, model_objects,
+                                      mesh=mesh)
+            if res is not None:
+                return res
         cls.fleet_load(instances)
         cls._require_one_window(instances)
         # jobs in a bin share user_params_key: one merge speaks for all
         up = {**cls.DEFAULTS, **instances[0].user_params}
         H = int(up["horizon"])
         spec = None
-        y_hists, temp_hists, temps_futs, fut_ts = [], [], [], []
+        y_hists, temp_hists, fut_ts = [], [], []
         for inst in instances:
             spec, times, target, temps, now = inst._loaded
             warm = max(spec.target_lags, spec.weather_lags) + 1
-            ent = inst.context.entity
             fut_t = now + spec.step * np.arange(0, H)
-            temps_futs.append(inst.system.weather.forecast(ent.lat, ent.lon, now, fut_t))
             y_hists.append(target[-warm:])
             temp_hists.append(temps[-warm:])
             fut_ts.append(fut_t)
+        # one vectorized weather call per bin (bitwise == per-instance)
+        ents = [inst.context.entity for inst in instances]
+        temps_futs = instances[0].system.weather.forecast_many(
+            [e.lat for e in ents], [e.lon for e in ents],
+            instances[0]._loaded[4], fut_ts[0])
         mu = np.stack([m["mu"] for m in model_objects])
         sd = np.stack([m["sd"] for m in model_objects])
         stacked = {k: np.stack([m["params"][k] for m in model_objects])
@@ -211,6 +303,7 @@ class ForecastModelBase(ModelInterface):
         predictor — callers then fall back to the numpy reference path,
         preserving the executor equivalence contract for models that
         cannot run device-resident."""
+        import jax.numpy as jnp
         statics = cls._rollout_statics(up, stacked)
         key = (cls, spec, H, statics, mesh)
         fn = _ROLLOUT_CACHE.get(key)
@@ -218,17 +311,24 @@ class ForecastModelBase(ModelInterface):
             predict = cls._device_predict_factory(spec, statics)
             if predict is None:
                 return None
-            fn = _ROLLOUT_CACHE.setdefault(
+            fn = _ROLLOUT_CACHE.put(
                 key, make_device_rollout(predict, spec, H, mesh=mesh))
         tl, wl = spec.target_lags, spec.weather_lags
-        f32 = np.float32
-        y0 = np.asarray(y_hist, f32)[..., -tl:]
+        f32 = jnp.float32
+        y0 = jnp.asarray(y_hist, f32)[..., -tl:]
         if spec.use_weather:
-            tw0 = np.asarray(temp_hist, f32)[..., -(wl + 1):]
+            tw0 = jnp.asarray(temp_hist, f32)[..., -(wl + 1):]
         else:                            # unused carry, keep it minimal
-            tw0 = np.zeros(y0.shape[:-1] + (1,), f32)
+            tw0 = jnp.zeros(y0.shape[:-1] + (1,), f32)
         hod, dow = calendar_phases(t_start + spec.step * np.arange(H))
-        out = fn(stacked, np.asarray(mu, f32), np.asarray(sd, f32), y0, tw0,
-                 np.asarray(temps_future, f32),
-                 np.asarray(hod, f32), np.asarray(dow, f32))
-        return np.asarray(out, np.float64)
+        # shape-bucketed dispatch: pad the instance axis to its bucket so
+        # nearby bin sizes hit ONE compilation (per-instance recursion =>
+        # padded lanes cannot perturb real ones); slice the pad back off
+        n = y0.shape[0] if y0.ndim > 1 else 0
+        pad = bucket_n(n) - n if n else 0
+        stacked = {k: edge_pad(jnp.asarray(v), pad) for k, v in stacked.items()}
+        args = [edge_pad(jnp.asarray(a, f32), pad)
+                for a in (mu, sd, y0, tw0, temps_future)]
+        out = fn(stacked, *args, jnp.asarray(hod, f32), jnp.asarray(dow, f32))
+        out = np.asarray(out, np.float64)
+        return out[:n] if n else out

@@ -13,6 +13,55 @@ from ..timeseries.transforms import (HOUR, align_resample, calendar_features,
                                      calendar_features_jnp, calendar_phases,
                                      lagged_features, regular_grid)
 
+# ---------------------------------------------------------------------------
+# Trace accounting: every jitted hot-path program increments the counter in
+# its PYTHON body, which only executes while jax traces (a compiled cache hit
+# never re-enters Python). ``trace_count()`` deltas therefore equal the
+# number of retraces/compilations — the steady-state regression tests and
+# ``FleetExecutor.last_bin_stats["retraces"]`` are built on this.
+# ---------------------------------------------------------------------------
+_TRACE_COUNT = 0
+
+
+def note_trace() -> None:
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing: fleet bins of nearby sizes share one compiled program.
+# ---------------------------------------------------------------------------
+
+def bucket_n(n: int) -> int:
+    """Power-of-two bucket for a fleet bin's instance axis (and the runtime
+    ring's history axis): padding N up to the bucket makes the train and
+    rollout jit caches key on the bucket, so a bin that shrinks by one job
+    (a failed deployment, a removed sensor) re-uses the warm compilation
+    instead of retracing."""
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def edge_pad(a, pad: int, axis: int = 0):
+    """Pad ``axis`` by repeating the trailing slice ``pad`` times. Edge
+    replication — never zeros — so padded instances run the same numerics
+    as a real one (GAM knot rows must stay strictly increasing); callers
+    slice the pad back off every output. Works on numpy and jax arrays."""
+    if pad <= 0:
+        return a
+    import jax.numpy as jnp
+    xp = jnp if isinstance(a, jnp.ndarray) else np
+    take = [slice(None)] * a.ndim
+    take[axis] = slice(a.shape[axis] - 1, a.shape[axis])
+    shape = list(a.shape)
+    shape[axis] = pad
+    return xp.concatenate(
+        [a, xp.broadcast_to(a[tuple(take)], shape)], axis=axis)
+
 
 @dataclass(frozen=True)
 class FeatureSpec:
@@ -70,6 +119,77 @@ def fleet_hourly_series(system, ctxs, t0: float, t1: float,
 def hourly_series(system, ctx, t0: float, t1: float, step: float) -> Tuple[np.ndarray, np.ndarray]:
     grid, targets = fleet_hourly_series(system, [ctx], t0, t1, step)
     return grid, targets[0]
+
+
+def fleet_window(system, ctxs, t0: float, t1: float, step: float):
+    """``fleet_hourly_series`` plus the two extras the incremental runtime
+    needs to keep a bin's history device-resident across polls:
+
+    * ``mask (N, T)`` — which grid bins held real points (the others carry
+      window-relative forward-fill / leading-zero values);
+    * ``prior (N,)`` — per-series count of stored points strictly before
+      the read window, taken under the SAME store lock as the read, so a
+      later ``read_many(since=watermark)`` can prove no out-of-order
+      append landed behind the watermark.
+
+    Returns ``(grid, targets, mask, prior)``; rows computed by the exact
+    ``align_resample`` rule, so ``targets`` equals what the cold path
+    loads.
+    """
+    raw, prior = system.store.read_many([c.ts_id for c in ctxs],
+                                        t0 - step, t1 + step,
+                                        prior_counts=True)
+    grid = regular_grid(t0, t1, step)
+    rows, masks = [], []
+    in_window = np.zeros(len(raw), np.int64)   # points < t1 (next watermark)
+    for i, (t, v) in enumerate(raw):
+        if t.size == 0:
+            rows.append(np.zeros_like(grid))
+            masks.append(np.zeros(grid.size, bool))
+            continue
+        in_window[i] = int(np.searchsorted(t, t1)) \
+            - int(np.searchsorted(t, t0 - step))
+        _, r, m = align_resample(t, v, step=step, start=t0, end=t1,
+                                 with_mask=True)
+        rows.append(r)
+        masks.append(m)
+    # prior counts from the store are "< t0 - step"; the runtime watermark
+    # is t1, so fold in the returned points below it (same lock => exact)
+    prior = prior + in_window
+    if not rows:
+        z = np.zeros((0, grid.size))
+        return grid, z, z.astype(bool), prior
+    return grid, np.stack(rows), np.stack(masks), prior
+
+
+def align_delta(raw, t_hi: float, t1: float, step: float
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Align a watermark-delta read onto the ``d`` new grid bins covering
+    ``[t_hi, t1)``: returns ``(vals (N, d), mask (N, d))`` where ``vals``
+    holds each filled bin's mean (same bincount rule as
+    ``align_resample``) and ``mask`` marks filled bins. Empty bins are
+    left 0 here — the device ring update forward-fills them from the
+    previous ring column, which by induction carries the value
+    ``align_resample`` would have propagated."""
+    d = max(int(round((t1 - t_hi) / step)), 0)
+    n = len(raw)
+    sizes = np.asarray([t.size for t, _ in raw], np.int64)
+    if sizes.sum() == 0:
+        return np.zeros((n, d)), np.zeros((n, d), bool)
+    # one flattened bincount over (series, bin) — per-(series,bin) sums
+    # accumulate in the same store order as align_resample's, so filled
+    # bins land bitwise-identical to the cold aligner
+    tcat = np.concatenate([t for t, _ in raw if t.size])
+    vcat = np.concatenate([v for _, v in raw if v.size])
+    sidx = np.repeat(np.arange(n), sizes)
+    idx = np.floor((tcat - t_hi) / step).astype(np.int64)
+    ok = (idx >= 0) & (idx < d)
+    flat = sidx[ok] * d + idx[ok]
+    sums = np.bincount(flat, weights=vcat[ok], minlength=n * d).reshape(n, d)
+    cnts = np.bincount(flat, minlength=n * d).reshape(n, d)
+    mask = cnts > 0
+    vals = np.where(mask, sums / np.maximum(cnts, 1), 0.0)
+    return vals, mask
 
 
 def design_matrix(spec: FeatureSpec, times, target, temps) -> Tuple[np.ndarray, np.ndarray]:
@@ -176,6 +296,7 @@ def make_device_rollout(predict_fn, spec: FeatureSpec, horizon: int,
     import jax.numpy as jnp
 
     def run(stacked, mu, sd, y0, tw0, temps_future, hod, dow):
+        note_trace()                 # Python body runs only while tracing
         cal = calendar_features_jnp(hod, dow)                    # (H, 5)
         xs = (jnp.moveaxis(temps_future, -1, 0), cal)
 

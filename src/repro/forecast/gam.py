@@ -109,6 +109,7 @@ class GAMForecaster(ForecastModelBase):
         # target_lags shifts the concurrent-temp column, so defaults here
         # would spline the wrong feature and diverge from LocalPool
         cols = _spline_cols(up)
+        X = np.asarray(X)                # spline expansion is host-side
         knots, Xes = [], []
         for i in range(X.shape[0]):
             ks = [np.linspace(X[i, :, j].min() - 1e-3, X[i, :, j].max() + 1e-3,
@@ -117,7 +118,7 @@ class GAMForecaster(ForecastModelBase):
             Xes.append(_expand(X[i], ks, cols))
         Xe = jnp.asarray(np.stack(Xes))
         th = _ridge_fleet(Xe, jnp.asarray(y), 1e-2, mesh=mesh)
-        return {"theta": np.asarray(th), "knots": np.stack(knots),
+        return {"theta": th, "knots": np.stack(knots),
                 "cols": np.tile(np.asarray(cols), (X.shape[0], 1))}
 
     @classmethod

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .base import ForecastModelBase
+from .features import bucket_n, edge_pad, note_trace
 
 
 def _ridge_fit(X, y, lam=1e-2):
@@ -16,21 +17,36 @@ def _ridge_fit(X, y, lam=1e-2):
     return jnp.linalg.solve(A, b)
 
 
-_ridge_fit_j = jax.jit(_ridge_fit)
-_ridge_fit_fleet = jax.jit(jax.vmap(_ridge_fit, in_axes=(0, 0, None)),
+def _ridge_fit_counted(X, y, lam=1e-2):
+    note_trace()                     # Python body runs only while tracing
+    return _ridge_fit(X, y, lam)
+
+
+_ridge_fit_j = jax.jit(_ridge_fit_counted)
+_ridge_fit_fleet = jax.jit(jax.vmap(_ridge_fit_counted, in_axes=(0, 0, None)),
                            static_argnums=())
 
 
 def _ridge_fleet(X, y, lam=1e-2, mesh=None):
     """Vmapped per-instance ridge solve; with ``mesh`` the instance axis is
     shard_map-partitioned (one sharded dispatch, no collectives). Shared by
-    the LR and GAM fleet fits."""
+    the LR and GAM fleet fits.
+
+    The instance axis is padded up to its power-of-two bucket (edge
+    replication, pad lanes sliced off the solution) so nearby bin sizes
+    share ONE compilation — the vmapped solve is per-lane independent, so
+    real lanes are unaffected."""
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    n = X.shape[0]
+    pad = bucket_n(n) - n
+    X, y = edge_pad(X, pad), edge_pad(y, pad)
     if mesh is None:
-        return _ridge_fit_fleet(X, y, lam)
+        return _ridge_fit_fleet(X, y, lam)[:n]
     from ..distributed.sharding import fleet_sharded
-    fit = fleet_sharded(lambda xx, yy: jax.vmap(_ridge_fit, (0, 0, None))(
-        xx, yy, lam), mesh, key=("ridge_fleet", lam))
-    return fit(X, y)
+    fit = fleet_sharded(lambda xx, yy: jax.vmap(_ridge_fit_counted,
+                                                (0, 0, None))(xx, yy, lam),
+                        mesh, key=("ridge_fleet", lam))
+    return fit(X, y)[:n]
 
 
 class LinearForecaster(ForecastModelBase):
@@ -47,9 +63,10 @@ class LinearForecaster(ForecastModelBase):
 
     @classmethod
     def _fleet_fit(cls, X, y, rng, up, mesh=None):
-        theta = np.asarray(_ridge_fleet(jnp.asarray(X), jnp.asarray(y),
-                                        1e-2, mesh=mesh))
-        return {"theta": theta}
+        # stays device-resident: base.fleet_train converts ONCE for
+        # persistence and hands the device copy to the runtime for scoring
+        return {"theta": _ridge_fleet(jnp.asarray(X), jnp.asarray(y),
+                                      1e-2, mesh=mesh)}
 
     @classmethod
     def _fleet_predict(cls, stacked, X):

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .base import ForecastModelBase
-from .features import FeatureSpec
+from .features import FeatureSpec, bucket_n, edge_pad, note_trace
 
 N_LAYERS = 2
 
@@ -67,6 +67,7 @@ def _loss(params, seqs, y, y_scale):
 
 @partial(jax.jit, static_argnames=("epochs", "width", "lr"))
 def _fit_jax(key, seqs, y, y_scale, *, epochs: int, width: int, lr: float):
+    note_trace()                     # Python body runs only while tracing
     params = _init(key, width)
 
     def step(carry, i):
@@ -126,18 +127,23 @@ class LSTMForecaster(ForecastModelBase):
         width = int(up["hidden"])
         epochs, lr = int(up["epochs"]), float(up["lr"])
         N = X.shape[0]
+        # keys at the TRUE bin size, then bucket-padded (see ann.py)
         keys = jax.random.split(jax.random.PRNGKey(int(rng.integers(2**31))), N)
-        ys = np.abs(y).max(axis=1) * 1.2 + 1e-6
+        ys = np.abs(np.asarray(y)).max(axis=1) * 1.2 + 1e-6
+        pad = bucket_n(N) - N
         fit = jax.vmap(lambda k, s, yy, sc: _fit_jax(
             k, s, yy, sc, epochs=epochs, width=width, lr=lr))
-        if mesh is not None:
+        if mesh is None:
+            fit = jax.jit(fit)
+        else:
             from ..distributed.sharding import fleet_sharded
             fit = fleet_sharded(fit, mesh,
                                 key=("lstm_fit", epochs, width, lr))
-        params = fit(keys, jnp.asarray(X[:, :, ::-1], jnp.float32),
-                     jnp.asarray(y, jnp.float32), jnp.asarray(ys, jnp.float32))
-        return {**{k: np.asarray(v) for k, v in params.items()},
-                "y_scale": ys}
+        params = fit(edge_pad(keys, pad),
+                     edge_pad(jnp.asarray(X, jnp.float32)[:, :, ::-1], pad),
+                     edge_pad(jnp.asarray(y, jnp.float32), pad),
+                     edge_pad(jnp.asarray(ys, jnp.float32), pad))
+        return {**{k: v[:N] for k, v in params.items()}, "y_scale": ys}
 
     @classmethod
     def _fleet_predict(cls, stacked, X):

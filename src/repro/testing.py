@@ -25,6 +25,48 @@ def subprocess_env(src_dir) -> dict:
             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
 
 
+HOUR = 3600.0
+
+
+def build_steady_castor(kind: str, cls, hp: dict, *, n: int = 6,
+                        seed: int = 9, site: str = "Z",
+                        train_every: float = 1e12,
+                        score_every: float = HOUR, days: int = 38,
+                        window_days: int = 14):
+    """Smart-grid fleet for steady-state poll sequences: one ``kind``
+    deployment per prosumer (named ``s-{site}_PRO_0_{i}``), first due at
+    FLEET_NOW, scoring every ``score_every`` — data pre-ingested through
+    ``days`` so successive polls find new window rows. Shared by
+    tests/test_fleet_runtime.py and benchmarks/bench_steady_state.py so
+    the equivalence fixtures and the perf gate exercise the same system."""
+    from .core import Castor, Schedule
+    from .timeseries.ingest import SiteSpec, build_site
+    c = Castor()
+    build_site(c, SiteSpec(site, n_prosumers=n, n_feeders=1,
+                           n_substations=1, seed=seed),
+               t0=0.0, t1=days * DAY)
+    c.publish(kind, "1.0", cls)
+    c.deploy_for_all(package=kind, signal="ENERGY_LOAD", name_prefix="s",
+                     kind="PROSUMER", train=Schedule(FLEET_NOW, train_every),
+                     score=Schedule(FLEET_NOW, score_every),
+                     user_params={"train_window_days": window_days, **hp})
+    return c
+
+
+def run_polls(c, k: int, *, executor=None, t0: float = FLEET_NOW,
+              step: float = HOUR):
+    """Run ``k`` consecutive scheduler polls through ``executor`` (default:
+    the castor's persistent fleet executor — the runtime-warm path),
+    asserting every job succeeds. Returns the executor (its
+    ``last_bin_stats`` describe the final poll)."""
+    ex = executor if executor is not None else c.fleet_executor()
+    for i in range(k):
+        res = ex.run(c.scheduler.poll(t0 + i * step))
+        assert all(r.ok for r in res), \
+            [r.error for r in res if not r.ok]
+    return ex
+
+
 def build_fleet_castor(kind: str, cls, hp: dict, mesh_opt: str, *,
                        n: int = 6, seed: int = 9, site: str = "Z",
                        run: bool = True):

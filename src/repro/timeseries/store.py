@@ -117,6 +117,7 @@ class TimeSeriesStore:
         self.append_count = 0          # points ingested
         self.read_count = 0            # single-series read() calls
         self.read_many_count = 0       # batched read_many() calls
+        self.delta_read_count = 0      # watermark-delta read_many(since=...)
         self.compaction_count = 0      # tail flushes
         self.merge_count = 0           # segment merges
         self.merged_points = 0         # points moved by merges
@@ -197,16 +198,34 @@ class TimeSeriesStore:
             s.tail_view = _Segment(_freeze(t[order]), _freeze(v[order]))
         return s.tail_view
 
-    def _read_locked(self, s: Optional[_Series], start, end
+    def _prior_count_locked(self, s: Optional[_Series], t) -> int:
+        """Number of stored points with time < ``t`` — O(log n) binary
+        searches over the sorted segments plus the cached sorted tail.
+        This is the late-data watermark check for delta readers: a count
+        that moved under an unchanged watermark means an out-of-order
+        append landed in already-consumed history."""
+        if s is None or s.count == 0 or t is None:
+            return 0
+        n = sum(int(np.searchsorted(seg.times, t)) for seg in s.segments)
+        if s.tail_n:
+            n += int(np.searchsorted(self._tail_segment(s).times, t))
+        return n
+
+    def _read_locked(self, s: Optional[_Series], start, end,
+                     consolidate: bool = True
                      ) -> Tuple[np.ndarray, np.ndarray]:
         if s is None or s.count == 0:
             return _EMPTY, _EMPTY
         # amortized consolidation: once dirty (non-oldest-segment) data
         # reaches 1/8 of the series, merge it down so future reads are
         # slices; below that, serve via an ephemeral window merge so a
-        # small append never forces an O(n) rewrite on the next read
+        # small append never forces an O(n) rewrite on the next read.
+        # Watermark-delta reads (read_many(since=...)) skip this: their
+        # windows touch only the newest points, so triggering an O(n)
+        # rewrite on the steady-state hot path would defeat the O(delta)
+        # contract.
         dirty = s.count - (s.segments[0].n if s.segments else 0)
-        if dirty and dirty * 8 >= s.count:
+        if consolidate and dirty and dirty * 8 >= s.count:
             self._consolidate(s)
         segs = list(s.segments)
         if s.tail_n:
@@ -234,18 +253,54 @@ class TimeSeriesStore:
             return self._read_locked(self._data.get(ts_id), start, end)
 
     def read_many(self, ts_ids: Sequence[str], start: Optional[float] = None,
-                  end: Optional[float] = None
-                  ) -> List[Tuple[np.ndarray, np.ndarray]]:
+                  end: Optional[float] = None, *,
+                  since: Optional[float] = None, prior_counts: bool = False):
         """Batched read: ONE store round-trip for a whole fleet bin.
 
         Returns one ``(times, values)`` pair per id (empty arrays for
         unknown ids), all under a single lock acquisition. This is the
         entry point ``FleetExecutor`` bins use instead of N ``read()``s.
+
+        ``since`` is the watermark-delta form: equivalent to
+        ``start=since`` but served without the amortized consolidation
+        pass (the window touches only the newest points — O(log n + delta)
+        guaranteed) and counted in ``delta_read_count`` telemetry.
+
+        With ``prior_counts=True`` the return value is ``(pairs, prior)``
+        where ``prior[i]`` is the number of stored points of ``ts_ids[i]``
+        strictly before ``start``/``since`` — computed under the SAME lock
+        acquisition as the read, so a delta reader can detect out-of-order
+        (late) appends race-free: if ``prior`` moved since the last poll,
+        history changed behind the watermark and cached state is stale.
         """
+        if since is not None:
+            start = since
+        consolidate = since is None
         with self._lock:
             self.read_many_count += 1
-            return [self._read_locked(self._data.get(i), start, end)
-                    for i in ts_ids]
+            if since is not None:
+                self.delta_read_count += 1
+            out, prior = [], []
+            for i in ts_ids:
+                s = self._data.get(i)
+                if since is not None and s is not None and s.count \
+                        and len(s.segments) == 1 and not s.tail_n:
+                    # steady-state fast path: consolidated series, delta
+                    # window — two binary searches, zero-copy views
+                    seg = s.segments[0]
+                    lo = int(np.searchsorted(seg.times, start))
+                    hi = seg.n if end is None else \
+                        int(np.searchsorted(seg.times, end))
+                    if prior_counts:
+                        prior.append(lo)
+                    out.append((seg.times[lo:hi], seg.values[lo:hi]))
+                    continue
+                if prior_counts:
+                    prior.append(self._prior_count_locked(s, start))
+                out.append(self._read_locked(s, start, end, consolidate))
+            if prior_counts:
+                return out, np.asarray(prior, np.int64)
+            return out
 
     def read_window_batch(self, ts_ids: Sequence[str],
                           start: Optional[float] = None,
@@ -302,6 +357,7 @@ class TimeSeriesStore:
                 "appends": self.append_count,
                 "reads": self.read_count,
                 "read_many": self.read_many_count,
+                "delta_reads": self.delta_read_count,
                 "compactions": self.compaction_count,
                 "merges": self.merge_count,
                 "merged_points": self.merged_points,

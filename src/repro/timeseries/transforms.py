@@ -24,13 +24,22 @@ def regular_grid(start: float, end: float, step: float) -> np.ndarray:
 
 
 def align_resample(times, values, *, step: float, start: Optional[float] = None,
-                   end: Optional[float] = None, how: str = "mean") -> Tuple[np.ndarray, np.ndarray]:
+                   end: Optional[float] = None, how: str = "mean",
+                   with_mask: bool = False):
     """Aggregate an irregular series onto a regular grid [start, end) with
-    bin width ``step``. Empty bins are filled by forward-fill (then 0)."""
+    bin width ``step``. Empty bins are filled by forward-fill (then 0).
+
+    With ``with_mask=True`` additionally returns the boolean fill mask —
+    ``mask[j]`` is True where bin j held real points (False bins carry
+    forward-filled or zero values). The incremental fleet runtime needs
+    the mask to re-derive window-relative fill semantics from a ring
+    buffer whose fill sources may have slid out of the current window.
+    """
     t = np.asarray(times, np.float64)
     v = np.asarray(values, np.float64)
     if t.size == 0:
-        return np.empty(0), np.empty(0)
+        e = np.empty(0)
+        return (e, e, np.empty(0, bool)) if with_mask else (e, e)
     start = float(t.min() // step * step) if start is None else start
     end = float(t.max() // step * step + step) if end is None else end
     grid = regular_grid(start, end, step)
@@ -53,6 +62,8 @@ def align_resample(times, values, *, step: float, start: Optional[float] = None,
             out = np.where(ffidx >= 0, out[np.maximum(ffidx, 0)], 0.0)
         else:
             out = np.zeros(nbins)
+    if with_mask:
+        return grid, out, cnts > 0
     return grid, out
 
 

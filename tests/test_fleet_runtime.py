@@ -1,0 +1,260 @@
+"""Steady-state FleetRuntime: warm polls are O(delta), retrace-free, and
+observationally equivalent to the cold fleet path and to LocalPool.
+
+Contracts pinned here:
+  * repeated-poll forecasts: runtime(warm) == cold fleet == LocalPool
+    (LocalPool for the deterministic closed-form models; ANN/LSTM fleet
+    training seeds differ from per-instance training by design)
+  * zero retraces after warmup, INCLUDING across two different bin sizes
+    that land in the same shape bucket
+  * warm telemetry: cache_hit, delta_rows == steps since last poll, one
+    watermark-delta store read, no single reads
+  * invalidation: late (out-of-order) appends, now regression, and the
+    runtime/rollout opt-outs all fall back to the cold path correctly
+  * the batched weather service is bitwise the per-instance calls
+  * the rollout compile cache is LRU-bounded with live hit/miss counters
+"""
+import numpy as np
+import pytest
+
+from repro.core.executor import FleetExecutor, LocalPoolExecutor
+from repro.core.runtime import FleetRuntime
+from repro.forecast import (ANNForecaster, GAMForecaster, LSTMForecaster,
+                            LinearForecaster)
+from repro.testing import (FLEET_ATOL, FLEET_NOW as NOW, FLEET_RTOL, HOUR,
+                           build_steady_castor, run_polls)
+
+MODELS = {
+    "lr": (LinearForecaster, {}),
+    "gam": (GAMForecaster, {}),
+    "ann": (ANNForecaster, {"hidden": 8, "epochs": 20}),
+    "lstm": (LSTMForecaster, {"hidden": 8, "epochs": 20}),
+}
+POLLS = 3
+
+
+def _histories(c, n):
+    return {i: c.predictions.history(f"s-Z_PRO_0_{i}") for i in range(n)}
+
+
+@pytest.mark.parametrize("kind", list(MODELS))
+def test_runtime_equals_cold_fleet_repeated_polls(kind):
+    """Warm polls (device ring + on-device assembly + cached params) must
+    persist the same forecasts as the cold fleet path — with training due
+    EVERY poll, so the warm train path is exercised, not just scoring."""
+    cls, hp = MODELS[kind]
+    ca = build_steady_castor(kind, cls, hp, n=5, train_every=HOUR)
+    ex = run_polls(ca, POLLS)
+    assert all(b["runtime"] == "warm" for b in ex.last_bin_stats), \
+        ex.last_bin_stats
+    cb = build_steady_castor(kind, cls, hp, n=5, train_every=HOUR)
+    run_polls(cb, POLLS, executor=FleetExecutor(cb, runtime="off"))
+    ha, hb = _histories(ca, 5), _histories(cb, 5)
+    for i in range(5):
+        assert len(ha[i]) == len(hb[i]) == POLLS
+        for a, b in zip(ha[i], hb[i]):
+            np.testing.assert_array_equal(a.times, b.times)
+            np.testing.assert_allclose(a.values, b.values, rtol=FLEET_RTOL,
+                                       atol=FLEET_ATOL, err_msg=kind)
+
+
+@pytest.mark.parametrize("kind", ["lr", "gam"])
+def test_runtime_equals_local_pool_repeated_polls(kind):
+    """The runtime path also matches LocalPool over a poll sequence for
+    the deterministic (closed-form) models — the executor-equivalence
+    contract extends through the incremental state."""
+    cls, hp = MODELS[kind]
+    ca = build_steady_castor(kind, cls, hp, n=4)
+    run_polls(ca, POLLS)
+    cb = build_steady_castor(kind, cls, hp, n=4)
+    run_polls(cb, POLLS, executor=LocalPoolExecutor(cb, max_parallel=4))
+    for i in range(4):
+        fa = ca.predictions.history(f"s-Z_PRO_0_{i}")
+        fb = cb.predictions.history(f"s-Z_PRO_0_{i}")
+        assert len(fa) == len(fb) == POLLS
+        for a, b in zip(fa, fb):
+            np.testing.assert_array_equal(a.times, b.times)
+            np.testing.assert_allclose(a.values, b.values, rtol=FLEET_RTOL,
+                                       atol=FLEET_ATOL, err_msg=kind)
+
+
+def test_warm_polls_zero_retraces_and_delta_telemetry():
+    """After warmup, every score poll of a steady sequence reports
+    cache_hit, delta_rows == steps since the last poll, ONE watermark-delta
+    read, no single reads, and ZERO retraces (trace counters live in every
+    jitted hot-path body, so this catches any shape instability)."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=5)
+    ex = run_polls(c, 2)                         # warmup: cold + first delta
+    for k in range(2, 5):
+        res = ex.run(c.scheduler.poll(NOW + k * HOUR))
+        assert all(r.ok for r in res)
+        assert len(ex.last_bin_stats) == 1
+        for b in ex.last_bin_stats:
+            assert b["runtime"] == "warm" and b["cache_hit"], b
+            assert b["delta_rows"] == 1, b
+            assert b["retraces"] == 0, b
+            assert b["read_many_calls"] == 1 and b["delta_reads"] == 1, b
+            assert b["single_reads"] == 0, b
+    # a poller stall: catch-up emits one bin per missed boundary and the
+    # runtime advances through them chronologically, one delta each
+    res = ex.run(c.scheduler.poll(NOW + 7 * HOUR))
+    assert all(r.ok for r in res)
+    assert [b["delta_rows"] for b in ex.last_bin_stats] == [1, 1, 1]
+    assert all(b["runtime"] == "warm" for b in ex.last_bin_stats)
+    # same-poll reuse: a train bin followed by a score bin at one `now`
+    # advances once — the score bin runs with ZERO store reads
+    c2 = build_steady_castor("lr", LinearForecaster, {}, n=5,
+                             train_every=HOUR)
+    ex2 = run_polls(c2, 3)
+    by_task = {("train" if "'train'" in b["bin"] else "score"): b
+               for b in ex2.last_bin_stats}
+    assert by_task["train"]["delta_rows"] == 1
+    assert by_task["score"]["delta_rows"] == 0
+    assert by_task["score"]["read_many_calls"] == 0, by_task["score"]
+
+
+def test_same_bucket_bin_sizes_share_all_compilations():
+    """A fleet of 5 and a fleet of 6 land in the same power-of-two bucket
+    (8): after the first fleet warms the caches, the second fleet's ENTIRE
+    poll sequence — cold build, warm train, warm score — compiles
+    nothing."""
+    ca = build_steady_castor("lr", LinearForecaster, {}, n=5,
+                             train_every=HOUR)
+    run_polls(ca, POLLS)                         # warms every program
+    cb = build_steady_castor("lr", LinearForecaster, {}, n=6,
+                             train_every=HOUR)
+    ex = FleetExecutor(cb)
+    for k in range(POLLS):
+        res = ex.run(cb.scheduler.poll(NOW + k * HOUR))
+        assert all(r.ok for r in res)
+        assert all(b["retraces"] == 0 for b in ex.last_bin_stats), \
+            (k, ex.last_bin_stats)
+    assert all(b["runtime"] == "warm" for b in ex.last_bin_stats)
+
+
+def test_late_append_invalidates_and_result_matches_cold():
+    """An out-of-order append landing BEHIND the watermark must cold-rebuild
+    the bin (the prior_counts handshake) — and the rebuilt forecasts equal
+    a runtime-off executor fed the same data."""
+    def run(runtime):
+        c = build_steady_castor("lr", LinearForecaster, {}, n=3)
+        ex = FleetExecutor(c, runtime=runtime)
+        run_polls(c, 2, executor=ex)
+        # late data: one series gets a point 2 days inside the window
+        ctx = c.graph.context("ENERGY_LOAD", "Z_PRO_0_1")
+        c.ingest(ctx.ts_id, [NOW - 2 * 86400.0 + 7.0], [9.0])
+        res = ex.run(c.scheduler.poll(NOW + 2 * HOUR))
+        assert all(r.ok for r in res)
+        return c, ex
+
+    ca, exa = run("auto")
+    assert all(b["runtime"] == "cold" for b in exa.last_bin_stats), \
+        exa.last_bin_stats
+    assert exa.runtime.invalidations == 1
+    cb, _ = run("off")
+    for i in range(3):
+        fa = ca.predictions.history(f"s-Z_PRO_0_{i}")[-1]
+        fb = cb.predictions.history(f"s-Z_PRO_0_{i}")[-1]
+        np.testing.assert_allclose(fa.values, fb.values, rtol=FLEET_RTOL,
+                                   atol=FLEET_ATOL)
+    # and the poll AFTER the rebuild is warm again
+    res = exa.runtime  # state survived the rebuild
+    ex = run_polls(ca, 1, executor=exa, t0=NOW + 3 * HOUR)
+    assert all(b["runtime"] == "warm" for b in ex.last_bin_stats)
+
+
+def test_now_regression_and_gap_invalidate():
+    """Direct runtime unit contract: a poll earlier than the watermark or
+    further away than the whole window cold-rebuilds instead of deltaing."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=3)
+    rt = FleetRuntime(c)
+
+    def insts(now):
+        up = {"train_window_days": 14, "now": now}
+        return [LinearForecaster(
+            context=c.graph.context("ENERGY_LOAD", f"Z_PRO_0_{i}"),
+            task="train", model_id=f"u{i}", model_version=None,
+            user_params=up, system=c) for i in range(3)]
+
+    assert rt.fleet_xy(LinearForecaster, insts(NOW)) is not None
+    assert rt.pop_stats()["runtime"] == "cold"
+    rt.fleet_xy(LinearForecaster, insts(NOW + HOUR))
+    assert rt.pop_stats()["delta_rows"] == 1
+    rt.fleet_xy(LinearForecaster, insts(NOW + 4 * HOUR))   # 3-step stall
+    assert rt.pop_stats()["delta_rows"] == 3
+    rt.fleet_xy(LinearForecaster, insts(NOW))              # regression
+    s = rt.pop_stats()
+    assert s["runtime"] == "cold" and s["runtime_reason"] == "now regression"
+    rt.fleet_xy(LinearForecaster, insts(NOW + 40 * 86400.0))   # full turnover
+    s = rt.pop_stats()
+    assert s["runtime"] == "cold" and s["runtime_reason"] == "delta spans window"
+    rt.fleet_xy(LinearForecaster, insts(NOW + 40 * 86400.0 + HOUR / 3))
+    assert rt.pop_stats()["runtime_reason"] == "misaligned now"
+
+
+def test_runtime_opt_outs():
+    """user_params['runtime']='off' and FleetExecutor(runtime='off') both
+    keep the bin on the cold path; rollout='host' skips the runtime score
+    path but still scores correctly."""
+    c = build_steady_castor("lr", LinearForecaster, {"runtime": "off"}, n=3)
+    ex = run_polls(c, 2)
+    assert all(b["runtime"] == "off" for b in ex.last_bin_stats)
+    c2 = build_steady_castor("lr", LinearForecaster, {}, n=3)
+    ex2 = run_polls(c2, 2, executor=FleetExecutor(c2, runtime="off"))
+    assert ex2.runtime is None
+    assert all(b["runtime"] == "off" for b in ex2.last_bin_stats)
+    c3 = build_steady_castor("lr", LinearForecaster, {"rollout": "host"}, n=3)
+    ex3 = run_polls(c3, 2)
+    assert all(not b["cache_hit"] for b in ex3.last_bin_stats
+               if "'score'" in b["bin"])
+
+
+def test_forecast_many_bitwise_matches_scalar_calls():
+    from repro.timeseries.weather import WeatherService
+    w = WeatherService(seed=11)
+    lats = [35.0, 35.2, 36.1]
+    lons = [33.0, 32.9, 33.3]
+    t = NOW + 3600.0 * np.arange(48)
+    many = w.forecast_many(lats, lons, NOW, t)
+    temp = w.temperature_many(lats, lons, t)
+    for i, (la, lo) in enumerate(zip(lats, lons)):
+        np.testing.assert_array_equal(many[i], w.forecast(la, lo, NOW, t))
+        np.testing.assert_array_equal(temp[i], w.temperature(la, lo, t))
+    # draw_len: trailing-slice evaluation preserves the rng stream exactly
+    tail = w.forecast_many(lats, lons, NOW, t[-7:], draw_len=t.size)
+    np.testing.assert_array_equal(tail, many[:, -7:])
+
+
+def test_rollout_cache_is_lru_bounded_with_counters():
+    from repro.forecast import base
+    from repro.forecast.features import FeatureSpec
+    lru = base._LRUCache(cap=3)
+    for k in range(5):
+        lru.put(("k", k), object())
+    assert len(lru) == 3                     # oldest evicted
+    assert lru.get(("k", 0)) is None         # miss (evicted)
+    assert lru.get(("k", 4)) is not None     # hit
+    assert lru.stats()["hits"] == 1 and lru.stats()["misses"] == 1
+    # the live rollout cache IS an _LRUCache and reports stats
+    st = base.rollout_cache_stats()
+    assert set(st) == {"size", "cap", "hits", "misses"}
+    assert st["size"] <= st["cap"]
+
+
+def test_store_delta_read_and_prior_counts():
+    from repro.timeseries.store import TimeSeriesStore
+    st = TimeSeriesStore(tail_max=8)
+    st.append("a", [1.0, 2.0, 5.0], [1, 2, 5])
+    st.append("b", [3.0], [3])
+    pairs, prior = st.read_many(["a", "b"], since=2.0, prior_counts=True)
+    assert st.delta_read_count == 1
+    np.testing.assert_array_equal(prior, [1, 0])      # points strictly < 2.0
+    np.testing.assert_array_equal(pairs[0][0], [2.0, 5.0])
+    np.testing.assert_array_equal(pairs[1][0], [3.0])
+    # a late append behind the watermark moves prior — the invalidation signal
+    st.append("a", [0.5], [0])
+    _, prior2 = st.read_many(["a", "b"], since=2.0, prior_counts=True)
+    np.testing.assert_array_equal(prior2, [2, 0])
+    # since= equals start= for the returned points
+    plain = st.read_many(["a"], 2.0, None)
+    np.testing.assert_array_equal(plain[0][0], [2.0, 5.0])
