@@ -37,6 +37,37 @@ def steady_state_table() -> str:
     ])
 
 
+INVOKE_ART = Path("BENCH_invocations.json")
+
+
+def invocations_table() -> str:
+    """Serverless invocation-pipeline sweep (Table-3 edition) from the
+    artifact written by benchmarks.bench_table3_invocations."""
+    if not INVOKE_ART.exists():
+        return "_no BENCH_invocations.json — run " \
+               "`python -m benchmarks.bench_table3_invocations` first_"
+    r = json.loads(INVOKE_ART.read_text())
+    tag = " (SMOKE)" if r.get("smoke") else ""
+    w = r["warm_affinity"]
+    p = r["process"]
+    lines = [
+        f"Serverless sweep{tag}: {r['tasks']:,} modelling tasks through the "
+        f"invocation pipeline; best aggregation **{r['agg_speedup']:.1f}x** "
+        "the one-task-per-action throughput. Warm-container affinity: "
+        f"{w['cold_starts']} cold starts for {w['invocations']} invocations "
+        f"over {w['polls']} polls ({w['runtime_warm_loads']} warm "
+        "FleetRuntime loads); process backend cold/warm exec "
+        f"{p['cold_exec_s_mean']:.2f}s / {p['warm_exec_s_mean']:.2f}s.",
+        "",
+        "| aggregation | invocations | wall (s) | tasks/s |",
+        "|---|---|---|---|",
+    ]
+    for s in r["sweep"]:
+        lines.append(f"| {s['aggregation']} | {s['invocations']:,} "
+                     f"| {s['wall_s']:.2f} | {s['tasks_per_s']:,.0f} |")
+    return "\n".join(lines)
+
+
 def fleet_shard_table() -> str:
     """Per-bin telemetry of the mesh-sharded fleet path, from the artifact
     written by benchmarks.bench_table3_scalability.shard_rows."""
@@ -122,5 +153,7 @@ if __name__ == "__main__":
     print(roofline_table("pod"))
     print("\n### Sharded fleet bins (Table-3 device sweep)\n")
     print(fleet_shard_table())
+    print("\n### Serverless invocations (Table-3 invocation sweep)\n")
+    print(invocations_table())
     print("\n### Steady-state poll hot path\n")
     print(steady_state_table())

@@ -4,8 +4,14 @@ deployed against the substation (Figs. 5/6), programmatic fleet deployment
 to every prosumer, rolling-horizon scoring over several cycles (Fig. 7),
 and the model-ranking retrieval.
 
-    PYTHONPATH=src python examples/smartgrid_forecasting.py
+    PYTHONPATH=src python examples/smartgrid_forecasting.py \
+        [--executor fleet|serverless|local]
+
+``--executor serverless`` routes the cycles through the serverless
+invocation pipeline (stateless payloads, aggregated actions, warm
+sticky workers — repro/serverless/) and prints its invocation telemetry.
 """
+import argparse
 import time
 
 import numpy as np
@@ -16,7 +22,7 @@ from repro.timeseries.ingest import SiteSpec, build_site, ingest_current_feed
 from repro.timeseries.transforms import mape
 
 
-def main():
+def main(executor: str = "fleet"):
     castor = Castor()
     t_end = 50 * DAY
     site = build_site(castor, SiteSpec("CY", n_prosumers=8, n_feeders=2,
@@ -58,13 +64,20 @@ def main():
     # ---- run 3 hourly scheduler cycles (rolling horizons, Fig. 7) ----
     t0 = time.time()
     for i in range(3):
-        res = castor.tick(45 * DAY + i * HOUR, executor="fleet")
+        res = castor.tick(45 * DAY + i * HOUR, executor=executor)
         ok = sum(r.ok for r in res)
         print(f"[tick {i}] {ok}/{len(res)} jobs ok")
         bad = [r for r in res if not r.ok]
         for r in bad[:3]:
             print("   FAIL", r.job.deployment_name, r.error[:100])
-    print(f"[exec] 3 cycles in {time.time()-t0:.1f}s wall")
+    print(f"[exec] 3 cycles in {time.time()-t0:.1f}s wall "
+          f"(executor={executor})")
+    if executor == "serverless":
+        s = castor.stats()["serverless"]
+        print(f"[serverless] {s['invocations']} invocations "
+              f"({s['cold_starts']} cold / {s['warm_starts']} warm), "
+              f"mean aggregation {s['mean_aggregation']:.1f} jobs/action, "
+              f"p50 exec {s['exec_s_p50'] * 1e3:.0f}ms")
 
     # ---- Fig. 6: compare the four substation models against actuals ----
     print("\nvalidation MAPE over the first scored day (paper: LR 3.92, "
@@ -91,4 +104,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--executor", default="fleet",
+                    choices=("fleet", "serverless", "local"))
+    main(ap.parse_args().executor)

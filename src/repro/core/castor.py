@@ -61,17 +61,26 @@ class Castor:
              max_parallel: int = 16) -> List[JobResult]:
         """One scheduler cycle: poll due jobs, execute, persist.
 
-        The fleet executor PERSISTS across ticks: its ``FleetRuntime``
-        keeps each bin's feature state device-resident, so consecutive
-        polls pay O(delta) instead of O(history) (see core/runtime.py).
-        The local pool is stateless and built per call."""
+        ``executor`` names an engine behind the shared ``run(jobs)``
+        protocol (see core/executor.py): "fleet" (megabatched; its
+        ``FleetRuntime`` persists across ticks so consecutive polls pay
+        O(delta) instead of O(history) — see core/runtime.py),
+        "serverless" (the invocation pipeline in repro/serverless/; its
+        warm workers also persist across ticks), or "local" (the
+        paper-faithful stateless pool, built per call)."""
         jobs = self.scheduler.poll(now)
         if not jobs:
             return []
         if executor == "fleet":
             ex = self.fleet_executor(max_parallel=max_parallel)
-        else:
+        elif executor == "serverless":
+            # honored on FIRST construction (the executor is cached)
+            ex = self.serverless_executor(max_in_flight=max_parallel)
+        elif executor == "local":
             ex = LocalPoolExecutor(self, max_parallel=max_parallel)
+        else:
+            raise ValueError(f"unknown executor {executor!r} "
+                             "(expected fleet | serverless | local)")
         return ex.run(jobs)
 
     def fleet_executor(self, *, max_parallel: int = 16) -> FleetExecutor:
@@ -84,13 +93,35 @@ class Castor:
             self._fleet_ex = cached = (max_parallel, ex)
         return cached[1]
 
+    def serverless_executor(self, **kw):
+        """The system's long-lived serverless executor (warm-container
+        affinity lives here — its workers' FleetRuntimes stay warm across
+        ticks). Keyword args configure only the FIRST construction;
+        rebuild explicitly via ``repro.serverless.ServerlessExecutor``
+        for custom backends."""
+        ex = getattr(self, "_serverless_ex", None)
+        if ex is None:
+            from ..serverless import ServerlessExecutor
+            ex = self._serverless_ex = ServerlessExecutor(self, **kw)
+        return ex
+
     def run_until(self, t0: float, t1: float, step: float,
                   executor: str = "fleet") -> List[JobResult]:
+        """Index-based stepping (``t = t0 + k*step``, never ``t += step``):
+        accumulated float error over a long simulated horizon would
+        otherwise drift the poll instants off the scheduler's boundary
+        lattice — skipping or double-firing occurrences near the end.
+        The step count is fixed up front with a relative epsilon so a
+        final boundary whose ``k*step`` rounds a hair above ``t1`` (e.g.
+        t0=0, t1=0.3, step=0.1) still fires; a t1 genuinely between
+        boundaries floors, never overshoots."""
+        if step <= 0:
+            raise ValueError(f"step must be positive, got {step}")
         out = []
-        t = t0
-        while t <= t1:
-            out.extend(self.tick(t, executor=executor))
-            t += step
+        r = (t1 - t0) / step
+        n = max(0, int(r + 1e-9 * max(1.0, r))) if t1 >= t0 else -1
+        for k in range(n + 1):
+            out.extend(self.tick(t0 + k * step, executor=executor))
         return out
 
     # ---------------- retrieval (semantic APIs) ----------------
@@ -114,14 +145,20 @@ class Castor:
 
     def stats(self) -> dict:
         st = self.store.stats()
-        return {**self.graph.stats(),
-                "points": st["points"],
-                "segments": st["segments"],
-                "store_reads": st["reads"],
-                "store_read_many": st["read_many"],
-                "deployments": len(self.deployments),
-                "model_versions": self.versions.count(),
-                "forecasts": self.predictions.count()}
+        out = {**self.graph.stats(),
+               "points": st["points"],
+               "segments": st["segments"],
+               "store_reads": st["reads"],
+               "store_read_many": st["read_many"],
+               "deployments": len(self.deployments),
+               "model_versions": self.versions.count(),
+               "forecasts": self.predictions.count()}
+        sv = getattr(self, "_serverless_ex", None)
+        if sv is not None:
+            # per-invocation cold/warm-start + queue/execution latency
+            # telemetry from the serverless monitor (repro/serverless/)
+            out["serverless"] = sv.stats()
+        return out
 
 
 HOUR = 3600.0

@@ -55,6 +55,9 @@ class DeploymentStore:
     def get(self, name: str) -> ModelDeployment:
         return self._deps[name]
 
+    def __contains__(self, name: str) -> bool:
+        return name in self._deps
+
     def all(self) -> List[ModelDeployment]:
         # the scheduler walks every deployment every poll: cache the sort
         # (invalidated on register/remove) instead of re-sorting a
@@ -84,11 +87,35 @@ def deploy_for_all(graph, deployments: DeploymentStore, *, package: str,
                    rank: int = 0) -> List[ModelDeployment]:
     """Programmatic deployment from a semantic rule (paper §3.2):
     one deployment per entity that carries ``signal`` (optionally filtered by
-    entity kind / topology)."""
+    entity kind / topology).
+
+    Incremental and idempotent: re-running the same rule after new
+    entities were linked (the paper's "automated replication as the IoT
+    application grows") deploys ONLY the not-yet-deployed contexts and
+    returns just those new deployments — already-registered names are
+    left untouched (their schedules/params are not rewritten), so a
+    periodic re-apply of the rule is safe."""
     out = []
     for ent in graph.find_entities(kind=kind, has_signal=signal, under=under):
+        name = f"{name_prefix}-{ent.name}"
+        if name in deployments:        # already applied to this context
+            prev = deployments.get(name)
+            if (prev.package, prev.version, prev.signal, prev.entity,
+                    prev.train, prev.score, prev.rank, prev.user_params) \
+                    != (package, version, signal, ent.name, train, score,
+                        rank, dict(user_params or {})):
+                # same name, DIFFERENT rule (package, version, schedules,
+                # params, or rank changed): skipping silently would leave
+                # the caller believing the re-configured fleet exists —
+                # the old loud-collision behavior is the right one here
+                raise ValueError(
+                    f"deployment {name} already registered with a "
+                    f"different configuration ({prev.package}=="
+                    f"{prev.version}/{prev.signal}); re-apply the "
+                    "identical rule, or use a different name_prefix")
+            continue
         dep = ModelDeployment(
-            name=f"{name_prefix}-{ent.name}",
+            name=name,
             package=package, version=version, signal=signal, entity=ent.name,
             train=train, score=score, user_params=dict(user_params or {}),
             rank=rank)

@@ -1,6 +1,15 @@
 """Model execution engines (paper §2 + §4.3, adapted per DESIGN.md §2).
 
-Two interchangeable executors:
+Every engine implements one protocol — ``run(jobs) -> List[JobResult]``
+(see ``Executor`` below) — with identical semantics: train jobs phase
+before score jobs, failures are per job (``scheduler.mark_failed`` gives
+at-least-once per occurrence), and all persistence goes through the
+idempotent ``ModelVersionStore``/``PredictionStore``, so executors are
+interchangeable behind ``Castor.tick(executor=...)``.
+
+Two engines live here (a third, ``ServerlessExecutor`` — the paper's
+actual serverless invocation pipeline with stateless payloads, action
+aggregation and warm-container affinity — lives in ``repro.serverless``):
 
 * ``LocalPoolExecutor`` — paper-faithful serverless semantics: each job is an
   independent unit on a bounded worker pool (the paper's 10..200 parallel
@@ -60,7 +69,17 @@ class JobResult:
     speculative_win: bool = False   # a backup copy finished first
 
 
-class _ExecBase:
+class Executor:
+    """The executor protocol every engine satisfies (LocalPool, Fleet,
+    Serverless): execute due jobs, persist effects idempotently, phase
+    trains before scores, mark failures for at-least-once re-fire, and
+    return one ``JobResult`` per job (order not contractual)."""
+
+    def run(self, jobs: List[Job]) -> List[JobResult]:
+        raise NotImplementedError
+
+
+class _ExecBase(Executor):
     def __init__(self, system):
         self.system = system
 

@@ -1,0 +1,27 @@
+"""Serverless invocation subsystem (paper §2 step 8 + Table 3).
+
+The paper executes tens of thousands of modelling tasks per cycle by
+fanning them out as serverless actions. This package reproduces that
+pipeline — stateless payloads, an aggregating invoker with bounded
+in-flight concurrency/retries/straggler backups, warm-container-sticky
+workers, and invocation telemetry — behind the same ``run(jobs)``
+executor protocol as ``LocalPoolExecutor``/``FleetExecutor``:
+
+* ``payload``  — serializable invocation payloads (refs, never live objects)
+* ``invoker``  — ``ServerlessInvoker`` + the ``ServerlessExecutor`` facade
+* ``worker``   — the warm container: payload -> private FleetExecutor
+* ``backend``  — ``InlineBackend`` (deterministic, in-process) and
+  ``ProcessBackend`` (spawned OS workers, JSON wire)
+* ``monitor``  — cold/warm starts, queue + execution latency
+
+Use ``Castor.tick(now, executor="serverless")`` or construct
+``ServerlessExecutor`` directly for custom backends.
+"""
+from .backend import InlineBackend, InvocationBackend, ProcessBackend
+from .invoker import ServerlessExecutor, ServerlessInvoker
+from .monitor import InvocationMonitor
+from .payload import InvocationPayload, InvocationResult, JobRef
+
+__all__ = ["InlineBackend", "InvocationBackend", "ProcessBackend",
+           "ServerlessExecutor", "ServerlessInvoker", "InvocationMonitor",
+           "InvocationPayload", "InvocationResult", "JobRef"]

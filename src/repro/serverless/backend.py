@@ -1,0 +1,191 @@
+"""Invocation backends: where a serverless action physically runs.
+
+``InvocationBackend`` is the protocol the invoker drives; two
+implementations ship:
+
+* ``InlineBackend`` — deterministic, in-process: each worker slot is a
+  warm ``Worker`` over the SHARED system (persistence happens directly
+  through the executor, artifacts never cross a wire). This is the
+  test/reference path and the one the Table-3 sweep uses at tens of
+  thousands of tasks — invocation machinery without OS-process cost.
+* ``ProcessBackend`` — real OS containers: spawned worker processes, each
+  building its own system replica from a picklable factory at cold start
+  (spawn, not fork — a forked child of a jax-initialized parent inherits
+  dead XLA threads). Payloads/results cross as JSON strings, proving the
+  stateless-payload contract; artifacts (trained versions, forecasts)
+  ship back for the invoker to persist idempotently.
+
+Both serialize invocations PER WORKER (a warm container runs one action
+at a time); cross-worker parallelism is the invoker's in-flight bound.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from .payload import InvocationPayload, InvocationResult
+from .worker import Worker, _process_worker_main
+
+
+class InvocationError(RuntimeError):
+    """An invocation failed at the backend level (worker died, transport
+    error) — the whole action is retriable on another worker."""
+
+
+class InvocationBackend:
+    """Protocol: ``invoke`` blocks until the action completes on the given
+    worker (the invoker provides cross-invocation concurrency)."""
+
+    #: worker artifacts must ship back for the invoker to persist (False
+    #: when workers write straight into the shared stores)
+    wants_artifacts: bool = False
+
+    def worker_ids(self) -> List[str]:
+        raise NotImplementedError
+
+    def invoke(self, payload: InvocationPayload,
+               worker_id: str) -> InvocationResult:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class InlineBackend(InvocationBackend):
+    wants_artifacts = False
+
+    def __init__(self, system, *, n_workers: int = 4):
+        self.system = system
+        self.n_workers = max(1, int(n_workers))
+        self._ids = [f"w{i}" for i in range(self.n_workers)]
+        self._workers: Dict[str, Worker] = {}
+        self._locks = {w: threading.Lock() for w in self._ids}
+        self._guard = threading.Lock()
+
+    def worker_ids(self) -> List[str]:
+        return list(self._ids)
+
+    def _worker(self, worker_id: str) -> Worker:
+        with self._guard:
+            w = self._workers.get(worker_id)
+            if w is None:                      # cold start: build the slot
+                w = self._workers[worker_id] = Worker(
+                    worker_id, self.system, collect_artifacts=False)
+            return w
+
+    def invoke(self, payload: InvocationPayload,
+               worker_id: str) -> InvocationResult:
+        w = self._worker(worker_id)
+        with self._locks[worker_id]:           # one action at a time
+            return w.execute(payload)
+
+
+class ProcessBackend(InvocationBackend):
+    wants_artifacts = True
+
+    def __init__(self, system_factory: Callable[[], object], *,
+                 n_workers: int = 2, env: Optional[Dict[str, str]] = None,
+                 invoke_timeout_s: float = 600.0,
+                 spawn_timeout_s: float = 300.0):
+        self.system_factory = system_factory
+        self.n_workers = max(1, int(n_workers))
+        self.env = dict(env or {})
+        self.invoke_timeout_s = invoke_timeout_s
+        self.spawn_timeout_s = spawn_timeout_s
+        self._ids = [f"p{i}" for i in range(self.n_workers)]
+        self._procs: Dict[str, tuple] = {}     # id -> (proc, task_q, result_q)
+        self._locks = {w: threading.Lock() for w in self._ids}
+        self._guard = threading.Lock()
+
+    def worker_ids(self) -> List[str]:
+        return list(self._ids)
+
+    def _spawn(self, worker_id: str) -> tuple:
+        import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        task_q: "mp.Queue" = ctx.Queue()
+        result_q: "mp.Queue" = ctx.Queue()
+        proc = ctx.Process(
+            target=_process_worker_main,
+            args=(task_q, result_q, self.system_factory, worker_id,
+                  self.env),
+            daemon=True, name=f"serverless-{worker_id}")
+        proc.start()
+        import queue as _q
+        deadline = time.time() + self.spawn_timeout_s
+        while True:
+            try:
+                tag, info = result_q.get(timeout=1.0)
+                break
+            except _q.Empty:
+                # a child that dies during interpreter bootstrap (before
+                # our handshake code runs) never posts anything: detect
+                # the corpse instead of burning the whole spawn timeout
+                if not proc.is_alive():
+                    raise InvocationError(
+                        f"{worker_id}: worker process died during cold "
+                        f"start (exit {proc.exitcode})")
+                if time.time() > deadline:
+                    proc.kill()
+                    raise InvocationError(
+                        f"{worker_id}: cold start timed out")
+        if tag != "ready":
+            raise InvocationError(f"{worker_id}: cold start failed: {info}")
+        return proc, task_q, result_q
+
+    def _worker(self, worker_id: str) -> tuple:
+        with self._guard:
+            entry = self._procs.get(worker_id)
+            if entry is None or not entry[0].is_alive():
+                entry = self._procs[worker_id] = self._spawn(worker_id)
+            return entry
+
+    def invoke(self, payload: InvocationPayload,
+               worker_id: str) -> InvocationResult:
+        import queue as _q
+        proc, task_q, result_q = self._worker(worker_id)
+        with self._locks[worker_id]:
+            task_q.put(payload.to_json())
+            deadline = time.time() + self.invoke_timeout_s
+            while True:
+                try:
+                    tag, iid, body = result_q.get(timeout=min(
+                        1.0, max(0.05, deadline - time.time())))
+                except _q.Empty:
+                    if not proc.is_alive():
+                        with self._guard:
+                            self._procs.pop(worker_id, None)
+                        raise InvocationError(
+                            f"{worker_id} died mid-invocation "
+                            f"(exit {proc.exitcode})")
+                    if time.time() > deadline:
+                        raise InvocationError(
+                            f"{worker_id}: invocation timed out")
+                    continue
+                # a predecessor that timed out here may deliver late:
+                # drop stale messages (result OR error) until OUR
+                # invocation's answer arrives — the stale one's effects
+                # are idempotent, and its error must not be attributed to
+                # (and burn the retry budget of) the current invocation.
+                # An empty id means the worker could not even parse the
+                # payload; that can only be the head-of-line message, i.e.
+                # ours, since the queue is FIFO per worker.
+                if iid and iid != payload.invocation_id:
+                    continue
+                if tag != "result":
+                    raise InvocationError(f"{worker_id}: {body}")
+                return InvocationResult.from_json(body)
+
+    def close(self) -> None:
+        with self._guard:
+            procs, self._procs = dict(self._procs), {}
+        for _, (proc, task_q, _rq) in procs.items():
+            try:
+                task_q.put(None)
+            except Exception:  # noqa: BLE001
+                pass
+        for _, (proc, _tq, _rq) in procs.items():
+            proc.join(timeout=5.0)
+            if proc.is_alive():
+                proc.kill()

@@ -1,0 +1,387 @@
+"""The serverless invoker (paper §2 step 8: "deployed models are
+automatically executed in parallel leveraging a serverless cloud
+computing framework"; architecture adapted from the Lithops invoker).
+
+Responsibilities, in the order they happen each phase:
+
+* **Phase barrier.** All due TRAIN work completes before any SCORE
+  invocation is submitted — a scoring action may consume a version
+  trained this cycle on a *different* worker, so the barrier is global,
+  not per-invocation (each backend worker only sees its own slice).
+* **Action aggregation.** Due jobs are binned exactly as the fleet
+  executor bins them, and WHOLE bins are packed into invocations up to
+  ``aggregation`` jobs per action (the paper groups its tens of
+  thousands of modelling tasks into far fewer serverless actions). Bins
+  are never split: a fleet bin is one megabatched computation whose f32
+  numerics depend on the batch composition — splitting would break the
+  bitwise inline == fleet contract.
+* **Warm-container affinity.** Each logical bin (``payload.affinity_key``:
+  deployment set + params, across polls and across train/score) routes
+  stickily to the worker that last ran it, so that worker's
+  ``FleetRuntime`` — device rings, compile caches, train->score param
+  handoff — stays warm. Affinity follows success: a bin that completes
+  on a different worker (retry, speculation) re-pins there.
+* **Bounded in-flight concurrency + retries + stragglers.** At most
+  ``max_in_flight`` invocations run concurrently; a failed invocation
+  retries with jittered exponential backoff on a DIFFERENT worker, and a
+  straggler (running ``straggler_factor``x the median of completed
+  invocations) gets one speculative backup copy. All of this is safe
+  because persistence (``ModelVersionStore``/``PredictionStore``) is
+  idempotent on (deployment, occurrence stamp): at-least-once invocation
+  yields exactly-once effects, duplicates no-op at the store.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.executor import Executor, JobResult
+from ..core.lineage import Forecast
+from ..core.scheduler import Job, bin_jobs
+from .backend import InlineBackend, InvocationBackend
+from .monitor import InvocationMonitor
+from .payload import (InvocationPayload, InvocationResult, JobRef,
+                      VersionRef, affinity_key)
+
+
+class ServerlessInvoker:
+    def __init__(self, system, backend: InvocationBackend, *,
+                 aggregation: int = 32, max_in_flight: int = 8,
+                 max_retries: int = 2, backoff_base_s: float = 0.05,
+                 straggler_factor: float = 4.0, straggler_min_s: float = 2.0,
+                 speculative: bool = True, seed: int = 0,
+                 monitor: Optional[InvocationMonitor] = None):
+        self.system = system
+        self.backend = backend
+        self.aggregation = max(1, int(aggregation))
+        self.max_in_flight = max(1, int(max_in_flight))
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.straggler_factor = float(straggler_factor)
+        self.straggler_min_s = float(straggler_min_s)
+        self.speculative = speculative
+        self.monitor = monitor or InvocationMonitor()
+        self._rng = random.Random(seed)
+        self._affinity: Dict[tuple, str] = {}
+        self._rr = 0
+        self._seq = 0
+
+    # ------------------------------------------------ public entry
+    def run(self, jobs: List[Job]) -> List[JobResult]:
+        out: List[JobResult] = []
+        trains = [j for j in jobs if j.task == "train"]
+        scores = [j for j in jobs if j.task != "train"]
+        for phase in (trains, scores):        # global train->score barrier
+            out.extend(self._run_phase(phase))
+        return out
+
+    # ------------------------------------------------ planning
+    def _plan(self, jobs: List[Job], results: List[JobResult]
+              ) -> List[dict]:
+        """Bins -> worker routing -> aggregated invocations. Also resolves
+        score-phase model versions (a never-trained deployment fails ALONE
+        here, mirroring FleetExecutor's partial-bin semantics) and records
+        the invoker-store version numbers so shipped-back forecasts can be
+        persisted with the invoker's lineage numbering."""
+        jobs = sorted(jobs, key=lambda j: j.scheduled_at)
+        routed: Dict[str, List[dict]] = {w: [] for w in
+                                         self.backend.worker_ids()}
+        workers = list(routed)
+        for key, bjs in bin_jobs(jobs).items():
+            resolved: Dict[Tuple[str, float], object] = {}
+            if key[2] != "train":
+                present = []
+                for j in bjs:
+                    mv = self.system.versions.get(j.deployment_name,
+                                                  at=j.scheduled_at)
+                    if mv is None:
+                        self.system.scheduler.mark_failed(j)
+                        results.append(JobResult(
+                            j, False, 0.0,
+                            error=f"no trained version for "
+                                  f"{j.deployment_name}"))
+                    else:
+                        present.append(j)
+                        resolved[(j.deployment_name, j.scheduled_at)] = mv
+                bjs = present
+                if not bjs:
+                    continue
+            ak = affinity_key(bjs)
+            w = self._affinity.get(ak)
+            if w is None or w not in routed:
+                w = workers[self._rr % len(workers)]
+                self._rr += 1
+                self._affinity[ak] = w
+            routed[w].append({"jobs": bjs, "ak": ak, "resolved": resolved})
+        invocations: List[dict] = []
+
+        def cut(worker: str, bins: List[dict]) -> None:
+            self._seq += 1
+            jobs_ = [j for b in bins for j in b["jobs"]]
+            resolved = {k: mv for b in bins
+                        for k, mv in b["resolved"].items()}
+            versions: Tuple[VersionRef, ...] = ()
+            if self.backend.wants_artifacts and resolved:
+                versions = tuple(
+                    VersionRef(deployment_name=name, version=mv.version,
+                               trained_at=mv.trained_at,
+                               model_object=mv.params)
+                    for (name, _at), mv in resolved.items())
+            payload = InvocationPayload(
+                invocation_id=f"inv-{self._seq:06d}",
+                jobs=tuple(JobRef.from_job(j) for j in jobs_),
+                versions=versions, created_at=time.time())
+            invocations.append({"payload": payload, "worker": worker,
+                                "aks": [b["ak"] for b in bins],
+                                "resolved": resolved})
+
+        for w, bins in routed.items():
+            cur: List[dict] = []
+            n = 0
+            for b in bins:
+                if cur and n + len(b["jobs"]) > self.aggregation:
+                    cut(w, cur)
+                    cur, n = [], 0
+                cur.append(b)
+                n += len(b["jobs"])
+            if cur:
+                cut(w, cur)
+        return invocations
+
+    # ------------------------------------------------ execution
+    def _run_phase(self, jobs: List[Job]) -> List[JobResult]:
+        if not jobs:
+            return []
+        results: List[JobResult] = []
+        invocations = self._plan(jobs, results)
+        if not invocations:
+            return results
+        workers = self.backend.worker_ids()
+        done_ids: set = set()
+        durations: List[float] = []
+        started: Dict[int, float] = {}        # token -> actual start time
+        attempts: Dict[str, int] = {}         # invocation_id -> submissions
+        inflight: Dict[str, int] = {}
+        backups: Dict[str, bool] = {}
+        deferred: List[tuple] = []            # (ready_at, inv) backoff queue
+        tokens = iter(range(1 << 30))
+
+        def attempt(inv: dict, token: int):
+            started[token] = time.perf_counter()
+            return self.backend.invoke(inv["payload"], inv["worker"])
+
+        def submit(pool, pending, inv, *, delay_s=0.0):
+            """Attempt accounting happens HERE (including deferred
+            retries: a deferred copy still counts against the budget and
+            against in-flight-copies, so a concurrently failing sibling
+            can neither overspend retries nor declare final failure while
+            a retry is waiting out its backoff). The backoff itself is
+            served from the main wait loop — a sleeping retry must not
+            occupy one of the max_in_flight pool slots."""
+            iid = inv["payload"].invocation_id
+            attempts[iid] = attempts.get(iid, 0) + 1
+            inflight[iid] = inflight.get(iid, 0) + 1
+            if delay_s > 0:
+                deferred.append((time.perf_counter() + delay_s, inv))
+                return
+            token = next(tokens)
+            inv = {**inv, "token": token}
+            f = pool.submit(attempt, inv, token)
+            pending[f] = inv
+
+        def other_worker(cur: str) -> str:
+            if len(workers) == 1:
+                return cur
+            pick = workers[self._rr % len(workers)]
+            self._rr += 1
+            if pick == cur:
+                pick = workers[self._rr % len(workers)]
+                self._rr += 1
+            return pick
+
+        with ThreadPoolExecutor(max_workers=self.max_in_flight) as pool:
+            pending: Dict[object, dict] = {}
+            for inv in invocations:
+                submit(pool, pending, inv)
+            while pending or deferred:
+                if deferred:              # release retries whose backoff
+                    now_d = time.perf_counter()    # elapsed
+                    due = [d for d in deferred if d[0] <= now_d]
+                    deferred = [d for d in deferred if d[0] > now_d]
+                    for _, inv in due:
+                        iid_d = inv["payload"].invocation_id
+                        if iid_d in done_ids:
+                            # a sibling copy won while this retry was
+                            # backing off: drop it (and its in-flight
+                            # claim) instead of re-running the action
+                            inflight[iid_d] -= 1
+                            continue
+                        token = next(tokens)
+                        inv = {**inv, "token": token}
+                        f = pool.submit(attempt, inv, token)
+                        pending[f] = inv
+                    if not pending:       # all runnable work is backing off
+                        if deferred:      # (or was just dropped as won)
+                            time.sleep(max(0.0, min(t for t, _ in deferred)
+                                           - time.perf_counter()))
+                        continue
+                timeout = self.straggler_min_s
+                if deferred:
+                    timeout = max(0.005, min(
+                        timeout, min(t for t, _ in deferred)
+                        - time.perf_counter()))
+                done, _ = wait(list(pending), timeout=timeout,
+                               return_when=FIRST_COMPLETED)
+                for f in done:
+                    inv = pending.pop(f)
+                    payload = inv["payload"]
+                    iid = payload.invocation_id
+                    inflight[iid] -= 1
+                    try:
+                        result = f.result()
+                    except Exception as e:  # noqa: BLE001
+                        self.monitor.record(
+                            payload=payload, worker_id=inv["worker"],
+                            error=f"{type(e).__name__}: {e}",
+                            retried=inv.get("retried", False),
+                            speculative=inv.get("speculative", False))
+                        if iid in done_ids:
+                            continue          # a sibling copy already won
+                        if attempts[iid] <= self.max_retries:
+                            retry = dict(inv)
+                            retry["worker"] = other_worker(inv["worker"])
+                            retry["retried"] = True
+                            retry["payload"] = replace(
+                                payload, attempt=attempts[iid] + 1,
+                                created_at=time.time())
+                            delay = (self.backoff_base_s
+                                     * (2 ** (attempts[iid] - 1))
+                                     * (1.0 + self._rng.random()))
+                            submit(pool, pending, retry, delay_s=delay)
+                        elif inflight[iid] == 0:
+                            # every copy burned: the whole action fails,
+                            # each job re-fires at its own boundary
+                            for ref in payload.jobs:
+                                job = ref.to_job()
+                                self.system.scheduler.mark_failed(job)
+                                results.append(JobResult(
+                                    job, False, 0.0,
+                                    attempts=attempts[iid],
+                                    error=f"invocation failed: "
+                                          f"{type(e).__name__}: {e}"))
+                        continue
+                    self.monitor.record(
+                        payload=payload, result=result,
+                        worker_id=result.worker_id,
+                        retried=inv.get("retried", False),
+                        speculative=inv.get("speculative", False))
+                    if iid in done_ids:
+                        continue              # speculation loser: effects
+                    done_ids.add(iid)         # already deduped by stores
+                    dur = result.finished_at - result.started_at
+                    durations.append(dur)
+                    for ak in inv["aks"]:     # affinity follows success
+                        self._affinity[ak] = result.worker_id
+                    results.extend(self._absorb(inv, result,
+                                                attempts[iid]))
+                # straggler resubmission (MapReduce-style backup copies).
+                # Pointless with a single worker: backends run one action
+                # per worker at a time, so a backup would just queue
+                # behind the very straggler it is meant to outrun.
+                if not self.speculative or not durations \
+                        or len(workers) == 1:
+                    continue
+                med = float(np.median(durations))
+                thresh = max(self.straggler_min_s,
+                             self.straggler_factor * med)
+                now = time.perf_counter()
+                for f, inv in list(pending.items()):
+                    iid = inv["payload"].invocation_id
+                    t0 = started.get(inv["token"])
+                    if t0 is None or iid in done_ids or backups.get(iid) \
+                            or attempts[iid] > self.max_retries \
+                            or now - t0 <= thresh:
+                        continue
+                    backups[iid] = True
+                    backup = dict(inv)
+                    backup["worker"] = other_worker(inv["worker"])
+                    backup["speculative"] = True
+                    backup["payload"] = replace(inv["payload"],
+                                                created_at=time.time())
+                    submit(pool, pending, backup)
+        return results
+
+    # ------------------------------------------------ absorption
+    def _absorb(self, inv: dict, result: InvocationResult,
+                n_attempts: int) -> List[JobResult]:
+        """Turn one completed invocation into persisted effects +
+        JobResults. Backends whose workers share the invoker's stores
+        (inline) have already persisted; artifact-shipping backends
+        (process) persist here — idempotently, so replayed or speculative
+        duplicates of the same occurrence no-op."""
+        if self.backend.wants_artifacts:
+            for vr in result.versions:
+                self.system.versions.save(
+                    vr.deployment_name, vr.model_object,
+                    trained_at=vr.trained_at,
+                    metadata={"serverless": True,
+                              "worker": result.worker_id})
+            fcs = []
+            for fb in result.forecasts:
+                mv = inv["resolved"].get((fb.deployment_name, fb.created_at))
+                dep = self.system.deployments.get(fb.deployment_name)
+                fcs.append(Forecast(
+                    deployment_name=fb.deployment_name, signal=fb.signal,
+                    entity=fb.entity, created_at=fb.created_at,
+                    times=np.asarray(fb.times),
+                    values=np.asarray(fb.values),
+                    # the invoker's OWN lineage numbering, not the worker
+                    # replica's (their histories can differ)
+                    model_version=(mv.version if mv is not None
+                                   else fb.model_version),
+                    rank=dep.rank))
+            if fcs:
+                self.system.predictions.save_many(fcs)
+        out = []
+        for o in result.outcomes:
+            job = o.ref.to_job()
+            if not o.ok:
+                # inline workers marked the shared scheduler already
+                # (idempotent set); process workers only marked their own
+                self.system.scheduler.mark_failed(job)
+            out.append(JobResult(job, o.ok, o.duration_s,
+                                 attempts=max(o.attempts, n_attempts),
+                                 error=o.error))
+        return out
+
+
+class ServerlessExecutor(Executor):
+    """Executor-protocol facade: ``run(jobs) -> List[JobResult]`` like
+    LocalPool/Fleet, but through the serverless invocation pipeline.
+    Default backend is the deterministic in-process ``InlineBackend``;
+    pass a ``ProcessBackend`` for real OS-level containers. Long-lived:
+    keep ONE instance across polls so warm-container affinity pays
+    (``Castor.serverless_executor()`` does this)."""
+
+    def __init__(self, system, *, backend: Optional[InvocationBackend] = None,
+                 n_workers: int = 4,
+                 monitor: Optional[InvocationMonitor] = None, **invoker_kw):
+        self.backend = backend or InlineBackend(system, n_workers=n_workers)
+        self.monitor = monitor or InvocationMonitor()
+        self.invoker = ServerlessInvoker(system, self.backend,
+                                         monitor=self.monitor, **invoker_kw)
+
+    def run(self, jobs: List[Job]) -> List[JobResult]:
+        return self.invoker.run(jobs)
+
+    def stats(self) -> dict:
+        return self.monitor.summary()
+
+    def close(self) -> None:
+        self.backend.close()

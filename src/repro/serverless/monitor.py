@@ -1,0 +1,110 @@
+"""Invocation telemetry (the Lithops monitor role, in-process).
+
+Every invocation — including retries and speculative backups — lands one
+record: which worker ran it, whether the container was cold or warm,
+queue latency (enqueue -> worker pickup; on a cold process worker this
+includes the container spawn, which is exactly what cold start means),
+and execution latency. ``summary()`` aggregates what the Table-3 sweep
+and ``Castor.stats()`` surface: cold/warm counts, sticky-routing warm
+reuse, aggregation factor actually achieved, latency percentiles.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+
+class InvocationMonitor:
+    def __init__(self, max_records: int = 100_000):
+        self.max_records = int(max_records)
+        self._lock = threading.Lock()
+        self.records: List[Dict[str, Any]] = []
+        self.dropped = 0
+        # running aggregates (cheap even when records overflow)
+        self.invocations = 0
+        self.cold_starts = 0
+        self.warm_starts = 0
+        self.retries = 0                 # re-submissions after failure
+        self.speculative = 0             # straggler backup copies
+        self.jobs = 0
+        self.failed_invocations = 0
+
+    def record(self, *, payload, result=None, worker_id: str,
+               error: str = "", retried: bool = False,
+               speculative: bool = False) -> None:
+        rec = {
+            "invocation_id": payload.invocation_id,
+            "worker": worker_id,
+            "jobs": payload.n_jobs,
+            "bins": payload.n_bins,
+            "attempt": payload.attempt,
+            "speculative": speculative,
+        }
+        if result is not None:
+            rec.update(
+                cold=result.cold_start,
+                queue_s=max(0.0, result.started_at - payload.created_at),
+                exec_s=max(0.0, result.finished_at - result.started_at),
+                ok=all(o.ok for o in result.outcomes))
+        else:
+            rec.update(cold=False, queue_s=0.0, exec_s=0.0, ok=False,
+                       error=error)
+        with self._lock:
+            self.invocations += 1
+            self.jobs += payload.n_jobs
+            if retried:
+                self.retries += 1
+            if speculative:
+                self.speculative += 1
+            if result is None:
+                self.failed_invocations += 1
+            elif result.cold_start:
+                self.cold_starts += 1
+            else:
+                self.warm_starts += 1
+            if len(self.records) < self.max_records:
+                self.records.append(rec)
+            else:
+                self.dropped += 1
+
+    @staticmethod
+    def _pctl(xs: List[float], q: float) -> float:
+        if not xs:
+            return 0.0
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    def summary(self) -> Dict[str, Any]:
+        with self._lock:
+            recs = list(self.records)
+            out = {
+                "invocations": self.invocations,
+                "cold_starts": self.cold_starts,
+                "warm_starts": self.warm_starts,
+                "retries": self.retries,
+                "speculative": self.speculative,
+                "failed_invocations": self.failed_invocations,
+                "jobs": self.jobs,
+            }
+        # derived ratios come from the SNAPSHOT, not the live counters —
+        # a concurrent record() between here and the with-block above
+        # must not produce a torn summary
+        out["warm_frac"] = (out["warm_starts"] / out["invocations"]
+                            if out["invocations"] else 0.0)
+        out["mean_aggregation"] = (out["jobs"] / out["invocations"]
+                                   if out["invocations"] else 0.0)
+        ok = [r for r in recs if r.get("ok")]
+        warm = [r for r in ok if not r["cold"]]
+        cold = [r for r in ok if r["cold"]]
+        out["queue_s_p50"] = self._pctl([r["queue_s"] for r in ok], 0.5)
+        out["queue_s_p95"] = self._pctl([r["queue_s"] for r in ok], 0.95)
+        out["exec_s_p50"] = self._pctl([r["exec_s"] for r in ok], 0.5)
+        out["cold_exec_s_mean"] = (sum(r["exec_s"] for r in cold) / len(cold)
+                                   if cold else 0.0)
+        out["warm_exec_s_mean"] = (sum(r["exec_s"] for r in warm) / len(warm)
+                                   if warm else 0.0)
+        workers: Dict[str, int] = {}
+        for r in recs:
+            workers[r["worker"]] = workers.get(r["worker"], 0) + 1
+        out["per_worker"] = dict(sorted(workers.items()))
+        return out

@@ -1,0 +1,206 @@
+"""Stateless, serializable invocation payloads (paper §2 step 8; the
+Lithops/IBM-Cloud-Functions invocation pipeline adapted to this repro).
+
+A serverless action must be reconstructable by a worker that shares
+NOTHING with the invoker but the stores: payloads therefore carry only
+*references* — deployment names, resolved implementation versions, the
+occurrence's ``scheduled_at`` stamp, bin keys — plus (for backends whose
+workers do not share the invoker's memory) the model-version artifacts a
+scoring action needs, encoded as plain arrays. Never live objects: no
+model instances, no executors, no store handles.
+
+Everything here round-trips through JSON (``to_json``/``from_json``), and
+the process backend ships payloads/results as JSON strings over the wire,
+which *proves* statelessness — an object that survives the JSON boundary
+cannot be secretly sharing state with the invoker. Arrays are encoded as
+(dtype, shape, base64-of-bytes) so the round-trip is bitwise.
+"""
+from __future__ import annotations
+
+import base64
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.scheduler import Job
+
+# ---------------------------------------------------------------- arrays
+
+
+def _enc(obj: Any) -> Any:
+    """Recursively encode numpy arrays/scalars into JSON-able structures."""
+    if isinstance(obj, np.ndarray):
+        a = np.ascontiguousarray(obj)
+        return {"__nd__": [str(a.dtype), list(a.shape),
+                           base64.b64encode(a.tobytes()).decode("ascii")]}
+    if isinstance(obj, (np.floating, np.integer, np.bool_)):
+        return {"__np__": [str(obj.dtype),
+                           base64.b64encode(
+                               np.asarray(obj).tobytes()).decode("ascii")]}
+    if isinstance(obj, dict):
+        return {k: _enc(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_enc(v) for v in obj]
+    return obj
+
+
+def _dec(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if "__nd__" in obj:
+            dtype, shape, b64 = obj["__nd__"]
+            a = np.frombuffer(base64.b64decode(b64), dtype=np.dtype(dtype))
+            return a.reshape([int(s) for s in shape]).copy()
+        if "__np__" in obj:
+            dtype, b64 = obj["__np__"]
+            return np.frombuffer(base64.b64decode(b64),
+                                 dtype=np.dtype(dtype))[0]
+        return {k: _dec(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_dec(v) for v in obj]
+    return obj
+
+
+# ---------------------------------------------------------------- refs
+
+
+@dataclass(frozen=True)
+class JobRef:
+    """A scheduled occurrence by reference — the serializable twin of
+    ``core.scheduler.Job`` (which is already pure primitives)."""
+    deployment_name: str
+    package: str
+    version: str
+    task: str
+    scheduled_at: float
+    signal: str
+    entity: str
+    user_params_key: str = ""
+
+    @classmethod
+    def from_job(cls, job: Job) -> "JobRef":
+        return cls(job.deployment_name, job.package, job.version, job.task,
+                   job.scheduled_at, job.signal, job.entity,
+                   job.user_params_key)
+
+    def to_job(self) -> Job:
+        return Job(deployment_name=self.deployment_name, package=self.package,
+                   version=self.version, task=self.task,
+                   scheduled_at=self.scheduled_at, signal=self.signal,
+                   entity=self.entity, user_params_key=self.user_params_key)
+
+
+@dataclass(frozen=True)
+class VersionRef:
+    """A model-version artifact: what a scoring worker 'downloads' from the
+    artifact store. ``model_object`` is the persisted params pytree (plain
+    numpy — data, not a live object)."""
+    deployment_name: str
+    version: int                      # the INVOKER store's version number
+    trained_at: float
+    model_object: Any = None
+
+
+@dataclass(frozen=True)
+class ForecastBlob:
+    """A worker-produced rolling-horizon forecast, shipped back for the
+    invoker to persist (idempotent on (deployment, created_at))."""
+    deployment_name: str
+    signal: str
+    entity: str
+    created_at: float
+    times: np.ndarray
+    values: np.ndarray
+    model_version: int
+    rank: int = 0
+
+
+# ---------------------------------------------------------------- payload
+
+
+@dataclass(frozen=True)
+class InvocationPayload:
+    """One serverless action: an *aggregate* of whole job bins (the paper
+    groups many modelling tasks into one invocation). Bins are never split
+    across payloads — a fleet bin is one megabatched computation, and
+    splitting it would change batch shapes and thus f32 numerics."""
+    invocation_id: str
+    jobs: Tuple[JobRef, ...]
+    versions: Tuple[VersionRef, ...] = ()      # score-phase artifacts
+    created_at: float = 0.0                    # wall-clock enqueue time
+    attempt: int = 1
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.jobs)
+
+    @property
+    def n_bins(self) -> int:
+        return len({r.to_job().bin_key for r in self.jobs})
+
+    def to_json(self) -> str:
+        return json.dumps(_enc(asdict(self)))
+
+    @classmethod
+    def from_json(cls, s: str) -> "InvocationPayload":
+        d = _dec(json.loads(s))
+        return cls(invocation_id=d["invocation_id"],
+                   jobs=tuple(JobRef(**j) for j in d["jobs"]),
+                   versions=tuple(VersionRef(**v) for v in d["versions"]),
+                   created_at=d["created_at"], attempt=d["attempt"])
+
+
+@dataclass(frozen=True)
+class JobOutcome:
+    ref: JobRef
+    ok: bool
+    duration_s: float
+    error: str = ""
+    attempts: int = 1
+
+
+@dataclass(frozen=True)
+class InvocationResult:
+    """What comes back over the wire: per-job outcomes, artifacts produced
+    by the action (versions from train jobs, forecasts from score jobs —
+    empty for backends that persist directly into the shared stores), and
+    the telemetry the monitor aggregates."""
+    invocation_id: str
+    worker_id: str
+    cold_start: bool
+    started_at: float                 # wall clock: queue latency = started - created
+    finished_at: float
+    outcomes: Tuple[JobOutcome, ...]
+    versions: Tuple[VersionRef, ...] = ()
+    forecasts: Tuple[ForecastBlob, ...] = ()
+
+    def to_json(self) -> str:
+        return json.dumps(_enc(asdict(self)))
+
+    @classmethod
+    def from_json(cls, s: str) -> "InvocationResult":
+        d = _dec(json.loads(s))
+        return cls(
+            invocation_id=d["invocation_id"], worker_id=d["worker_id"],
+            cold_start=d["cold_start"], started_at=d["started_at"],
+            finished_at=d["finished_at"],
+            outcomes=tuple(JobOutcome(ref=JobRef(**o.pop("ref")), **o)
+                           for o in d["outcomes"]),
+            versions=tuple(VersionRef(**v) for v in d["versions"]),
+            forecasts=tuple(ForecastBlob(**f) for f in d["forecasts"]))
+
+
+def affinity_key(bin_jobs: List[Job]) -> tuple:
+    """Sticky-routing key for one bin: which warm container its work
+    should land on. Excludes ``scheduled_at`` and ``task`` (unlike
+    ``Job.bin_key``) so catch-up occurrences, successive polls, and the
+    train/score halves of ONE logical bin all hit the same worker — the
+    worker's warm ``FleetRuntime`` state and its train->score device-param
+    handoff are keyed by exactly (deployment set, params), which is what
+    the member-name digest pins."""
+    import zlib
+    j0 = bin_jobs[0]
+    names = "\x00".join(sorted(j.deployment_name for j in bin_jobs))
+    return (j0.package, j0.version, j0.user_params_key,
+            zlib.crc32(names.encode()))

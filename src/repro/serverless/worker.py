@@ -1,0 +1,129 @@
+"""Stateless-payload workers (the Lithops worker/handler split adapted).
+
+A worker owns NOTHING the payload doesn't reference: it reconstructs its
+slice of work from the stores alone (``JobRef.to_job`` + the system's
+deployment/registry/series stores) and executes it through a private
+``FleetExecutor``. What it DOES keep between invocations is warmth — its
+``FleetRuntime`` (device rings, compile caches, train->score param
+handoff) persists for the worker's lifetime, which is why the invoker's
+sticky routing pays: the second invocation of a bin on the same worker is
+an O(delta) warm poll, on a different worker a cold rebuild.
+
+``Worker.execute`` is shared by both backends; ``_process_worker_main``
+is the long-lived loop a spawned container runs (JSON payloads in, JSON
+results out — the wire format proves statelessness).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .payload import (ForecastBlob, InvocationPayload, InvocationResult,
+                      JobOutcome, JobRef, VersionRef)
+
+
+class Worker:
+    """One warm container: a private ``FleetExecutor`` (own FleetRuntime,
+    own fallback pool) over a system handle. For the inline backend the
+    system IS the invoker's; for the process backend it is the worker's
+    own replica built from a factory at cold start."""
+
+    def __init__(self, worker_id: str, system, *, collect_artifacts: bool,
+                 max_parallel: int = 8):
+        from ..core.executor import FleetExecutor, LocalPoolExecutor
+        self.worker_id = worker_id
+        self.system = system
+        self.collect_artifacts = collect_artifacts
+        self.executor = FleetExecutor(
+            system, fallback=LocalPoolExecutor(system,
+                                               max_parallel=max_parallel))
+        self.invocations = 0
+
+    def execute(self, payload: InvocationPayload) -> InvocationResult:
+        started = time.time()
+        cold = self.invocations == 0
+        self.invocations += 1
+        # "download" the artifacts a scoring action needs: idempotent on
+        # (model_id, trained_at), so re-delivery (retries, sticky re-use
+        # after a local train of the same occurrence) is a no-op
+        for vr in payload.versions:
+            self.system.versions.save(vr.deployment_name, vr.model_object,
+                                      trained_at=vr.trained_at,
+                                      metadata={"delivered": True})
+        jobs = [r.to_job() for r in payload.jobs]
+        results = self.executor.run(jobs)
+        outcomes = tuple(
+            JobOutcome(ref=JobRef.from_job(r.job), ok=r.ok,
+                       duration_s=r.duration_s, error=r.error,
+                       attempts=r.attempts)
+            for r in results)
+        versions: List[VersionRef] = []
+        forecasts: List[ForecastBlob] = []
+        if self.collect_artifacts:
+            for r in results:
+                if not r.ok:
+                    continue
+                if r.job.task == "train":
+                    mv = self.system.versions.get(r.job.deployment_name,
+                                                  at=r.job.scheduled_at)
+                    versions.append(VersionRef(
+                        deployment_name=r.job.deployment_name,
+                        version=mv.version, trained_at=mv.trained_at,
+                        model_object=mv.params))
+                else:
+                    # newest-first: the forecast for this occurrence was
+                    # just appended at the tail, so a long-lived warm
+                    # worker's ship-back stays O(1) per job instead of
+                    # rescanning its whole replica history every poll
+                    for fc in reversed(self.system.predictions.history(
+                            r.job.deployment_name)):
+                        if fc.created_at == r.job.scheduled_at:
+                            forecasts.append(ForecastBlob(
+                                deployment_name=fc.deployment_name,
+                                signal=fc.signal, entity=fc.entity,
+                                created_at=fc.created_at, times=fc.times,
+                                values=fc.values,
+                                model_version=fc.model_version,
+                                rank=fc.rank))
+                            break
+        return InvocationResult(
+            invocation_id=payload.invocation_id, worker_id=self.worker_id,
+            cold_start=cold, started_at=started, finished_at=time.time(),
+            outcomes=outcomes, versions=tuple(versions),
+            forecasts=tuple(forecasts))
+
+
+def _process_worker_main(task_q, result_q, factory, worker_id: str,
+                         env: Optional[Dict[str, str]] = None) -> None:
+    """Entry point of a spawned worker container. ``factory`` is a
+    picklable zero-arg callable reconstructing the worker's system replica
+    (its 'connection to shared storage'): spawned processes share no
+    memory, so determinism of the factory is what stands in for a real
+    shared backend. Loop: JSON payload in -> execute -> JSON result out;
+    ``None`` is the shutdown sentinel."""
+    for k, v in (env or {}).items():
+        os.environ[k] = v
+    try:
+        system = factory()
+        worker = Worker(worker_id, system, collect_artifacts=True)
+        result_q.put(("ready", worker_id))
+    except BaseException as e:  # noqa: BLE001 — report cold-start failure
+        result_q.put(("fatal", f"{type(e).__name__}: {e}"))
+        return
+    while True:
+        msg = task_q.get()
+        if msg is None:
+            return
+        iid = ""
+        try:
+            payload = InvocationPayload.from_json(msg)
+            iid = payload.invocation_id
+            result = worker.execute(payload)
+            result_q.put(("result", iid, result.to_json()))
+        except BaseException as e:  # noqa: BLE001 — ship the error back,
+            # tagged with the invocation it belongs to so the backend can
+            # never attribute a stale predecessor's error to a later call
+            result_q.put(("error", iid, f"{type(e).__name__}: {e}"))

@@ -233,6 +233,40 @@ def test_semantic_graph_queries():
     assert {e.name for e in g.descendants("SUB")} == {"FD", "P1", "P2"}
 
 
+def test_find_entities_and_descendants_are_deterministic():
+    """The fleet-deployment queries must return identical, sorted results
+    regardless of entity/edge insertion order — `deploy_for_all` derives
+    deployment NAMES from them, and a nondeterministic order would make
+    'the same rule' deploy different fleets on different runs."""
+    def build(order):
+        g = SemanticGraph()
+        g.add_signal(Signal("LOAD"))
+        g.add_entity(Entity("SUB", "SUBSTATION"))
+        g.add_entity(Entity("FD1", "FEEDER"), parent="SUB")
+        g.add_entity(Entity("FD2", "FEEDER"), parent="SUB")
+        for name in order:
+            g.add_entity(Entity(name, "PROSUMER"),
+                         parent="FD1" if name < "P3" else "FD2")
+        for name in reversed(order):
+            g.link_timeseries(f"ts-{name}", "LOAD", name)
+        return g
+
+    names = ["P1", "P2", "P3", "P4", "P5"]
+    a = build(names)
+    b = build(list(reversed(names)))
+    for g in (a, b):
+        assert [e.name for e in g.find_entities(kind="PROSUMER")] == names
+        assert [e.name for e in g.find_entities(kind="PROSUMER",
+                                                under="SUB")] == names
+        assert [e.name for e in g.find_entities(has_signal="LOAD",
+                                                under="FD1")] == ["P1", "P2"]
+    assert [e.name for e in a.descendants("SUB")] \
+        == [e.name for e in b.descendants("SUB")]
+    # repeated calls are stable too
+    assert [e.name for e in a.descendants("SUB")] \
+        == [e.name for e in a.descendants("SUB")]
+
+
 def test_programmatic_fleet_deployment():
     c = Castor()
     c.publish("pkg", "1.0", _Dummy)
@@ -246,6 +280,63 @@ def test_programmatic_fleet_deployment():
                             kind="PROSUMER", score=Schedule(0.0, 60.0))
     assert len(deps) == 3                           # semantic rule respected
     assert all(d.name.startswith("m-P") for d in deps)
+
+
+def test_deploy_for_all_is_incremental_and_idempotent():
+    """Re-applying the SAME rule after the application grew deploys only
+    the new contexts and returns just those; a no-change re-run returns
+    [] and rewrites nothing (paper §3.2: automated replication as the IoT
+    application grows)."""
+    c = Castor()
+    c.publish("pkg", "1.0", _Dummy)
+    c.add_signal("LOAD")
+    for i in range(3):
+        c.add_entity(f"P{i}", "PROSUMER")
+        c.link(f"ts{i}", "LOAD", f"P{i}")
+    rule = dict(package="pkg", signal="LOAD", name_prefix="m",
+                kind="PROSUMER", score=Schedule(0.0, 60.0))
+    first = c.deploy_for_all(**rule)
+    assert [d.name for d in first] == ["m-P0", "m-P1", "m-P2"]
+    existing = c.deployments.get("m-P0")
+    assert c.deploy_for_all(**rule) == []           # idempotent no-op
+    assert c.deployments.get("m-P0") is existing    # not rewritten
+    # two new sensors arrive: only THEY deploy on re-apply
+    for i in (3, 4):
+        c.add_entity(f"P{i}", "PROSUMER")
+        c.link(f"ts{i}", "LOAD", f"P{i}")
+    second = c.deploy_for_all(**rule)
+    assert [d.name for d in second] == ["m-P3", "m-P4"]
+    assert len(c.deployments) == 5
+    # a DIFFERENT rule colliding on the same names must stay loud — the
+    # incremental skip is only for re-applying the SAME rule
+    c.publish("pkg2", "1.0", _Dummy)
+    with pytest.raises(ValueError):
+        c.deploy_for_all(**{**rule, "package": "pkg2"})
+
+
+def test_run_until_index_stepping_has_no_float_drift():
+    """`run_until` must step as t0 + k*step: accumulating `t += step`
+    drifts off the boundary lattice over long horizons (0.1 summed 1000x
+    overshoots 100.0), skipping the final scheduler boundary."""
+    c = Castor()
+    ticked = []
+    c.tick = lambda now, executor="fleet": ticked.append(now) or []
+    c.run_until(0.0, 100.0, 0.1)
+    assert len(ticked) == 1001                      # inclusive of t1
+    assert ticked[-1] == 0.0 + 1000 * 0.1           # exactly on-lattice
+    assert ticked[500] == 0.0 + 500 * 0.1
+    # the final boundary fires even when k*step rounds a hair ABOVE t1
+    # (3*0.1 > 0.3 in floats) ...
+    ticked.clear()
+    c.run_until(0.0, 0.3, 0.1)
+    assert len(ticked) == 4
+    # ... while a t1 strictly between boundaries floors, never overshoots
+    ticked.clear()
+    c.run_until(0.0, 0.46, 0.3)
+    assert ticked == [0.0, 0.3]
+    ticked.clear()
+    c.run_until(5.0, 4.0, 1.0)                      # empty interval
+    assert ticked == []
 
 
 # ---------------- lineage ----------------
