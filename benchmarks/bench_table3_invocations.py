@@ -1,25 +1,39 @@
 """Paper Table 3, invocation-pipeline edition: tens of thousands of
 modelling tasks through the serverless subsystem (repro/serverless/).
 
-Three measurements, persisted to ``BENCH_invocations.json`` (+ the warm
-section's per-invocation telemetry to ``artifacts/invocations_telemetry
-.json``):
+Five measurements (selectable via ``--sections``), merged into
+``BENCH_invocations.json`` (+ per-invocation telemetry artifacts under
+``artifacts/``):
 
-* **Aggregation sweep** (inline backend, >= 10k tasks): invocation
-  throughput vs. actions-per-invocation. A no-op fleet model isolates the
-  invocation machinery itself (payload construction, routing, bounded
-  in-flight submission, result absorption) — the paper's observation that
-  grouping modelling tasks into fewer serverless actions is what makes
-  tens of thousands of tasks per cycle feasible. Gated: the best
-  aggregation factor must beat aggregation=1 by >= GATE x.
-* **Warm-container affinity** (inline backend, real LR fleet): several
-  polls over multiple bins; sticky routing must produce cold starts only
-  on the first poll and re-route every later invocation to the worker
-  whose ``FleetRuntime`` is warm (asserted via the workers' runtime
-  warm-load counters, not just the monitor).
-* **Process backend at small N**: real spawned containers, 2 polls; cold
-  vs warm execution latency lands in the JSON (no perf gate — container
+* **sweep** — aggregation sweep (inline backend, >= 10k tasks):
+  invocation throughput vs. actions-per-invocation. A no-op fleet model
+  isolates the invocation machinery itself (payload construction,
+  routing, bounded in-flight submission, result absorption) — the
+  paper's observation that grouping modelling tasks into fewer
+  serverless actions is what makes tens of thousands of tasks per cycle
+  feasible. Gated: the best aggregation factor must beat aggregation=1
+  by >= GATE x.
+* **warm** — warm-container affinity (inline backend, real LR fleet):
+  several polls over multiple bins; sticky routing must produce cold
+  starts only on the first poll and re-route every later invocation to
+  the worker whose ``FleetRuntime`` is warm (asserted via the workers'
+  runtime warm-load counters, not just the monitor). Telemetry to
+  ``artifacts/invocations_telemetry.json``.
+* **process** — spawned-container backend at small N: 2 polls, cold vs
+  warm execution latency lands in the JSON (no perf gate — container
   spawn cost is environment noise).
+* **elastic** — autoscaled pool under a catch-up backlog: starts at
+  min_workers, must scale out past it while backlogged and reap back to
+  min after the drain (the 2 -> peak -> 2 trajectory is asserted), and
+  sustain >= ELASTIC_GATE x the fixed-fleet throughput (gated non-smoke;
+  the autoscaler trades a bounded slice of peak throughput for not
+  paying for idle containers).
+* **chaos** — seeded fault injection (kill-mid-action / drop-result /
+  duplicate-delivery / straggler-delay at probability 1.0 on first
+  delivery) over a real LR fleet: every scenario must leave the version
+  + prediction stores BITWISE equal to the fault-free run (asserted
+  unconditionally — this is the exactly-once acceptance gate CI runs).
+  Telemetry to ``artifacts/chaos_telemetry.json``.
 
 Methodology per the 2-core-box convention: min-of-reps timing, XLA CPU
 pinned single-threaded, the measured body in a SUBPROCESS (flags must
@@ -43,12 +57,18 @@ from .common import Row
 
 OUT = Path("BENCH_invocations.json")
 TELEMETRY = Path("artifacts/invocations_telemetry.json")
+CHAOS_TELEMETRY = Path("artifacts/chaos_telemetry.json")
 GATE = 1.2                     # best-aggregation vs aggregation=1 throughput
+ELASTIC_GATE = 0.8             # elastic throughput vs fixed-fleet reference
+
+SECTIONS = ("sweep", "warm", "process", "elastic", "chaos")
 
 FULL = {"n_dep": 128, "occurrences": 80, "aggs": (1, 8, 32, 128),
-        "reps": 3, "warm_polls": 6, "proc_n": 4}
+        "reps": 3, "warm_polls": 6, "proc_n": 4,
+        "elastic_occ": 40, "chaos_polls": 4, "chaos_n": 4}
 SMOKE = {"n_dep": 64, "occurrences": 5, "aggs": (1, 32),
-         "reps": 2, "warm_polls": 3, "proc_n": 2}
+         "reps": 2, "warm_polls": 3, "proc_n": 2,
+         "elastic_occ": 5, "chaos_polls": 3, "chaos_n": 3}
 
 
 # ------------------------------------------------------------------ child
@@ -229,40 +249,172 @@ def _proc(cfg: dict) -> dict:
         ex.close()
 
 
-def _child(smoke: bool) -> None:
-    cfg = SMOKE if smoke else FULL
-    sweep = _sweep(cfg)
-    warm, records = _warm_affinity(cfg)
-    proc = _proc(cfg)
-    out = {"smoke": smoke, "tasks": cfg["n_dep"] * cfg["occurrences"],
-           "gate": None if smoke else GATE,
-           "sweep": sweep, "warm_affinity": warm, "process": proc}
-    by_agg = {r["aggregation"]: r["tasks_per_s"] for r in sweep}
-    best = max(by_agg.values())
-    out["agg_speedup"] = best / by_agg[1]
+def _elastic(cfg: dict, smoke: bool) -> dict:
+    """Autoscaled pool vs fixed fleet on the same catch-up backlog: the
+    elastic run starts at min_workers, must scale out while backlogged,
+    reap back down once idle, and keep throughput within 1/ELASTIC_GATE
+    of the fixed fleet's."""
+    from repro.serverless import AutoscalePolicy, ServerlessExecutor
+    HOUR = 3600.0
+    n_dep, K = cfg["n_dep"], cfg["elastic_occ"]
+    tasks = n_dep * K
+    agg = 32
+
+    def backlog_run(**ex_kw):
+        c = _noop_castor(n_dep, 0.0)
+        c.scheduler.max_catchup = K + 1
+        ex = ServerlessExecutor(c, aggregation=agg, max_in_flight=8,
+                                speculative=False, **ex_kw)
+        res = ex.run(c.scheduler.poll(0.0))           # train (untimed)
+        assert all(r.ok for r in res)
+        jobs = c.scheduler.poll(K * HOUR)
+        assert len(jobs) == tasks
+        w0 = time.perf_counter()
+        res = ex.run(jobs)
+        wall = time.perf_counter() - w0
+        assert len(res) == tasks and all(r.ok for r in res), \
+            [r.error for r in res if not r.ok][:3]
+        return ex, wall
+
+    fixed_wall = min(backlog_run(n_workers=4)[1]
+                     for _ in range(cfg["reps"]))
+    pol = AutoscalePolicy(min_workers=2, max_workers=6,
+                          target_queue_p95_s=0.05, idle_ttl_s=0.3,
+                          scale_step=2)
+    walls, ex = [], None
+    for _ in range(cfg["reps"]):
+        ex, wall = backlog_run(n_workers=pol.min_workers, autoscale=pol)
+        walls.append(wall)
+    elastic_wall = min(walls)
+    # drain is over: after the TTL every container above min is idle-reaped
+    time.sleep(pol.idle_ttl_s + 0.1)
+    ex.reap_idle()
+    end_workers = len(ex.backend.worker_ids())
+    s = ex.stats()
+    peak = s["autoscale"]["peak_workers"]
+    row = {"tasks": tasks, "aggregation": agg,
+           "fixed_workers": 4, "fixed_wall_s": fixed_wall,
+           "fixed_tasks_per_s": tasks / fixed_wall,
+           "min_workers": pol.min_workers, "max_workers": pol.max_workers,
+           "peak_workers": peak, "end_workers": end_workers,
+           "scale_outs": s["autoscale"]["scale_outs"],
+           "reaps": s["autoscale"]["reaps"],
+           "elastic_wall_s": elastic_wall,
+           "elastic_tasks_per_s": tasks / elastic_wall,
+           "throughput_ratio": fixed_wall / elastic_wall,
+           "events": s["autoscale"]["events"]}
+    # the worker-count trajectory is the point: min -> above min -> min
+    assert peak > pol.min_workers, row
+    assert end_workers == pol.min_workers, row
+    assert s["autoscale"]["reaps"] >= 1, row
     if not smoke:
-        assert out["agg_speedup"] >= GATE, \
-            f"aggregation only {out['agg_speedup']:.2f}x vs " \
-            f"one-job-per-invocation (gate {GATE}x)"
+        assert row["throughput_ratio"] >= ELASTIC_GATE, \
+            f"elastic only {row['throughput_ratio']:.2f}x of fixed-fleet " \
+            f"throughput (gate {ELASTIC_GATE}x)"
+    return row
+
+
+def _chaos(cfg: dict) -> dict:
+    """Seeded chaos over a real LR fleet: each scenario injects its fault
+    on every invocation's first delivery; the stores must end bitwise
+    equal to the fault-free run (asserted — the exactly-once gate)."""
+    from repro.forecast import LinearForecaster
+    from repro.serverless import ChaosPolicy, ServerlessExecutor
+    from repro.testing import (FLEET_NOW, HOUR, assert_stores_bitwise_equal,
+                               build_steady_castor, snapshot_stores)
+    polls, n = cfg["chaos_polls"], cfg["chaos_n"]
+    scenarios = {
+        "kill": dict(seed=11, kill_mid_action=1.0),
+        "drop": dict(seed=12, drop_result=1.0),
+        "duplicate": dict(seed=13, duplicate=1.0),
+        "delay": dict(seed=14, delay=1.0, delay_s=0.02),
+    }
+
+    def run_polls(chaos):
+        c = build_steady_castor("lr", LinearForecaster, {}, n=n)
+        ex = ServerlessExecutor(c, n_workers=2, chaos=chaos, max_retries=3,
+                                backoff_base_s=0.01, speculative=False)
+        c._serverless_ex = ex
+        w0 = time.perf_counter()
+        for k in range(polls):
+            res = ex.run(c.scheduler.poll(FLEET_NOW + k * HOUR))
+            assert res and all(r.ok for r in res), \
+                [r.error for r in res if not r.ok][:3]
+        return c, ex, time.perf_counter() - w0
+
+    ref_c, _, ref_wall = run_polls(None)
+    ref = snapshot_stores(ref_c)
+    rows, records = {}, {}
+    for name, kw in scenarios.items():
+        chaos = ChaosPolicy(**kw)
+        c, ex, wall = run_polls(chaos)
+        assert_stores_bitwise_equal(ref, c, context=name)   # the gate
+        s = ex.stats()
+        assert chaos.summary().get(name, 0) >= 1, chaos.summary()
+        rows[name] = {"wall_s": wall, "injected": chaos.summary(),
+                      "invocations": s["invocations"],
+                      "retries": s["retries"],
+                      "failed_invocations": s["failed_invocations"],
+                      "stores_bitwise_equal": True}
+        records[name] = ex.monitor.records
+    out = {"polls": polls, "deployments": n, "forecasters": ["lr"],
+           "fault_free_wall_s": ref_wall, "scenarios": rows}
+    CHAOS_TELEMETRY.parent.mkdir(exist_ok=True)
+    CHAOS_TELEMETRY.write_text(json.dumps(
+        {"summary": out, "records": records}, indent=1))
+    return out
+
+
+def _child(smoke: bool, sections: tuple[str, ...]) -> None:
+    cfg = SMOKE if smoke else FULL
+    # merge into an existing artifact: CI runs the sections as separate
+    # steps (perf sweep vs chaos/elastic) against the same OUT file
+    out = json.loads(OUT.read_text()) if OUT.exists() else {}
+    out.update({"smoke": smoke, "gate": None if smoke else GATE,
+                "sections": sorted(set(out.get("sections", []))
+                                   | set(sections))})
+    if "sweep" in sections:
+        sweep = out["sweep"] = _sweep(cfg)
+        out["tasks"] = cfg["n_dep"] * cfg["occurrences"]
+        by_agg = {r["aggregation"]: r["tasks_per_s"] for r in sweep}
+        out["agg_speedup"] = max(by_agg.values()) / by_agg[1]
+        if not smoke:
+            assert out["agg_speedup"] >= GATE, \
+                f"aggregation only {out['agg_speedup']:.2f}x vs " \
+                f"one-job-per-invocation (gate {GATE}x)"
+    if "warm" in sections:
+        warm, records = _warm_affinity(cfg)
+        out["warm_affinity"] = warm
+        TELEMETRY.parent.mkdir(exist_ok=True)
+        TELEMETRY.write_text(json.dumps(
+            {"warm_affinity_records": records,
+             "summary": {k: v for k, v in warm.items()
+                         if not isinstance(v, dict)}}, indent=1))
+    if "process" in sections:
+        out["process"] = _proc(cfg)
+    if "elastic" in sections:
+        out["elastic"] = _elastic(cfg, smoke)
+    if "chaos" in sections:
+        out["chaos"] = _chaos(cfg)
     OUT.write_text(json.dumps(out, indent=1))
-    TELEMETRY.parent.mkdir(exist_ok=True)
-    TELEMETRY.write_text(json.dumps(
-        {"warm_affinity_records": records,
-         "summary": {k: v for k, v in warm.items()
-                     if not isinstance(v, dict)}}, indent=1))
     print("CHILD_OK")
 
 
-def run(smoke: bool | None = None) -> list[Row]:
+def run(smoke: bool | None = None,
+        sections: tuple[str, ...] | None = None) -> list[Row]:
     if smoke is None:
         smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    sections = tuple(sections or SECTIONS)
+    unknown = set(sections) - set(SECTIONS)
+    assert not unknown, f"unknown sections {sorted(unknown)}"
     from repro.testing import subprocess_env
     env = subprocess_env(Path(__file__).parent.parent / "src")
     env["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                         " --xla_cpu_multi_thread_eigen=false "
                         "intra_op_parallelism_threads=1")
     cmd = [sys.executable, "-m", "benchmarks.bench_table3_invocations",
-           "--child"] + (["--smoke"] if smoke else [])
+           "--child", "--sections", ",".join(sections)] \
+        + (["--smoke"] if smoke else [])
     proc = subprocess.run(cmd, capture_output=True, text=True, timeout=580,
                           env=env, cwd=Path(__file__).parent.parent)
     assert proc.returncode == 0, proc.stderr[-3000:]
@@ -270,20 +422,37 @@ def run(smoke: bool | None = None) -> list[Row]:
     r = json.loads(OUT.read_text())
     tag = "_SMOKE" if smoke else ""
     rows: list[Row] = []
-    for s in r["sweep"]:
+    for s in r.get("sweep", []) if "sweep" in sections else []:
         rows.append((f"table3_invoke_agg{s['aggregation']}",
                      s["wall_s"] / s["tasks"] * 1e6,
                      f"tasks={s['tasks']}_invocations={s['invocations']}"
                      f"_tasks_per_s={s['tasks_per_s']:,.0f}{tag}"))
-    w = r["warm_affinity"]
-    rows.append(("table3_invoke_warm_affinity", w["warm_poll_s"] * 1e6,
-                 f"cold_starts={w['cold_starts']}_warm={w['warm_starts']}"
-                 f"_runtime_warm_loads={w['runtime_warm_loads']}{tag}"))
-    p = r["process"]
-    rows.append(("table3_invoke_process_smoke", p["wall_s"] * 1e6,
-                 f"workers={p['n_workers']}_cold_exec_s="
-                 f"{p['cold_exec_s_mean']:.2f}_warm_exec_s="
-                 f"{p['warm_exec_s_mean']:.2f}"))
+    if "warm" in sections:
+        w = r["warm_affinity"]
+        rows.append(("table3_invoke_warm_affinity", w["warm_poll_s"] * 1e6,
+                     f"cold_starts={w['cold_starts']}"
+                     f"_warm={w['warm_starts']}"
+                     f"_runtime_warm_loads={w['runtime_warm_loads']}{tag}"))
+    if "process" in sections:
+        p = r["process"]
+        rows.append(("table3_invoke_process_smoke", p["wall_s"] * 1e6,
+                     f"workers={p['n_workers']}_cold_exec_s="
+                     f"{p['cold_exec_s_mean']:.2f}_warm_exec_s="
+                     f"{p['warm_exec_s_mean']:.2f}"))
+    if "elastic" in sections:
+        e = r["elastic"]
+        rows.append(("table3_invoke_elastic", e["elastic_wall_s"] * 1e6,
+                     f"workers={e['min_workers']}to{e['peak_workers']}to"
+                     f"{e['end_workers']}_ratio_vs_fixed="
+                     f"{e['throughput_ratio']:.2f}{tag}"))
+    if "chaos" in sections:
+        ch = r["chaos"]
+        for name, row in ch["scenarios"].items():
+            rows.append((f"table3_invoke_chaos_{name}", row["wall_s"] * 1e6,
+                         f"injected={row['injected'].get(name, 0)}"
+                         f"_retries={row['retries']}"
+                         f"_bitwise_equal={row['stores_bitwise_equal']}"
+                         f"{tag}"))
     return rows
 
 
@@ -291,9 +460,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--child", action="store_true")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sections", default=",".join(SECTIONS),
+                    help="comma list of " + ",".join(SECTIONS))
     args = ap.parse_args()
+    secs = tuple(s for s in args.sections.split(",") if s)
     if args.child:
-        _child(args.smoke)
+        _child(args.smoke, secs)
     else:
-        for name, us, derived in run(smoke=args.smoke):
+        for name, us, derived in run(smoke=args.smoke, sections=secs):
             print(f"{name},{us:.1f},{derived}")

@@ -48,23 +48,62 @@ def invocations_table() -> str:
                "`python -m benchmarks.bench_table3_invocations` first_"
     r = json.loads(INVOKE_ART.read_text())
     tag = " (SMOKE)" if r.get("smoke") else ""
-    w = r["warm_affinity"]
-    p = r["process"]
-    lines = [
-        f"Serverless sweep{tag}: {r['tasks']:,} modelling tasks through the "
-        f"invocation pipeline; best aggregation **{r['agg_speedup']:.1f}x** "
-        "the one-task-per-action throughput. Warm-container affinity: "
-        f"{w['cold_starts']} cold starts for {w['invocations']} invocations "
-        f"over {w['polls']} polls ({w['runtime_warm_loads']} warm "
-        "FleetRuntime loads); process backend cold/warm exec "
-        f"{p['cold_exec_s_mean']:.2f}s / {p['warm_exec_s_mean']:.2f}s.",
-        "",
-        "| aggregation | invocations | wall (s) | tasks/s |",
-        "|---|---|---|---|",
-    ]
-    for s in r["sweep"]:
-        lines.append(f"| {s['aggregation']} | {s['invocations']:,} "
-                     f"| {s['wall_s']:.2f} | {s['tasks_per_s']:,.0f} |")
+    # sections land independently (CI runs perf and chaos/elastic as
+    # separate steps against the same artifact) — render what's there
+    parts = []
+    if "sweep" in r:
+        parts.append(
+            f"Serverless sweep{tag}: {r['tasks']:,} modelling tasks through "
+            f"the invocation pipeline; best aggregation "
+            f"**{r['agg_speedup']:.1f}x** the one-task-per-action "
+            "throughput.")
+    if "warm_affinity" in r:
+        w = r["warm_affinity"]
+        parts.append(
+            f"Warm-container affinity: {w['cold_starts']} cold starts for "
+            f"{w['invocations']} invocations over {w['polls']} polls "
+            f"({w['runtime_warm_loads']} warm FleetRuntime loads).")
+    if "process" in r:
+        p = r["process"]
+        parts.append(
+            "Process backend cold/warm exec "
+            f"{p['cold_exec_s_mean']:.2f}s / {p['warm_exec_s_mean']:.2f}s.")
+    if "elastic" in r:
+        e = r["elastic"]
+        parts.append(
+            f"Elastic pool: {e['min_workers']} -> {e['peak_workers']} -> "
+            f"{e['end_workers']} workers over a {e['tasks']:,}-task backlog "
+            f"({e['scale_outs']} scale-outs, {e['reaps']} reaps), "
+            f"**{e['throughput_ratio']:.2f}x** fixed-fleet throughput.")
+    if "chaos" in r:
+        ch = r["chaos"]
+        eq = all(s["stores_bitwise_equal"] for s in ch["scenarios"].values())
+        parts.append(
+            f"Chaos ({', '.join(ch['scenarios'])} at p=1.0 on first "
+            f"delivery, {ch['polls']} polls): stores bitwise-equal to "
+            f"fault-free = **{eq}**.")
+    lines = [" ".join(parts) or "_no sections recorded yet_"]
+    if "sweep" in r:
+        lines += [
+            "",
+            "| aggregation | invocations | wall (s) | tasks/s |",
+            "|---|---|---|---|",
+        ]
+        for s in r["sweep"]:
+            lines.append(f"| {s['aggregation']} | {s['invocations']:,} "
+                         f"| {s['wall_s']:.2f} | {s['tasks_per_s']:,.0f} |")
+    if "chaos" in r:
+        lines += [
+            "",
+            "| chaos scenario | injected | retries | failed invocations "
+            "| stores bitwise-equal |",
+            "|---|---|---|---|---|",
+        ]
+        for name, s in r["chaos"]["scenarios"].items():
+            lines.append(
+                f"| {name} | {s['injected'].get(name, 0)} | {s['retries']} "
+                f"| {s['failed_invocations']} "
+                f"| {s['stores_bitwise_equal']} |")
     return "\n".join(lines)
 
 

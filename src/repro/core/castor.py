@@ -156,9 +156,27 @@ class Castor:
         sv = getattr(self, "_serverless_ex", None)
         if sv is not None:
             # per-invocation cold/warm-start + queue/execution latency
-            # telemetry from the serverless monitor (repro/serverless/)
+            # telemetry from the serverless monitor (repro/serverless/),
+            # plus elastic-pool / chaos / storage sub-summaries when the
+            # executor was built with those features
             out["serverless"] = sv.stats()
         return out
+
+    def close(self) -> None:
+        """Release long-lived execution resources: the cached serverless
+        executor's backend (spawned worker processes, owned storage
+        buckets). Idempotent; the in-memory stores stay usable."""
+        sv = getattr(self, "_serverless_ex", None)
+        if sv is not None:
+            self._serverless_ex = None
+            sv.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 HOUR = 3600.0

@@ -8,6 +8,11 @@ Responsibilities, in the order they happen each phase:
   invocation is submitted — a scoring action may consume a version
   trained this cycle on a *different* worker, so the barrier is global,
   not per-invocation (each backend worker only sees its own slice).
+  ``submit()`` exposes the async single-phase surface underneath the
+  barrier: it returns one ``ResponseFuture`` per invocation and streams
+  each action's effects into the stores the moment it completes, so a
+  consumer ``wait()``-ing with ``ANY_COMPLETED`` can read an
+  early-finishing bin's forecasts while the slowest bin is still running.
 * **Action aggregation.** Due jobs are binned exactly as the fleet
   executor bins them, and WHOLE bins are packed into invocations up to
   ``aggregation`` jobs per action (the paper groups its tens of
@@ -15,12 +20,23 @@ Responsibilities, in the order they happen each phase:
   are never split: a fleet bin is one megabatched computation whose f32
   numerics depend on the batch composition — splitting would break the
   bitwise inline == fleet contract.
-* **Warm-container affinity.** Each logical bin (``payload.affinity_key``:
-  deployment set + params, across polls and across train/score) routes
-  stickily to the worker that last ran it, so that worker's
-  ``FleetRuntime`` — device rings, compile caches, train->score param
-  handoff — stays warm. Affinity follows success: a bin that completes
-  on a different worker (retry, speculation) re-pins there.
+* **Warm-container affinity + late-bound dispatch.** Each logical bin
+  (``payload.affinity_key``: deployment set + params, across polls and
+  across train/score) routes stickily to the worker that last ran it, so
+  that worker's ``FleetRuntime`` — device rings, compile caches,
+  train->score param handoff — stays warm. Affinity follows success: a
+  bin that completes on a different worker (retry, speculation) re-pins
+  there. Planning only records a PREFERENCE; the actual worker is chosen
+  at dispatch time from the live pool, which is what makes the pool
+  elastic — an action queued behind a busy container can land on a
+  worker the autoscaler provisioned after the phase was planned. With a
+  fixed fleet (no autoscaler) dispatch waits for the preferred worker,
+  preserving deterministic sticky routing.
+* **Autoscaling.** With an ``AutoscalePolicy`` the invoker drives an
+  ``Autoscaler`` from its wait loop: scale out while ready work is
+  backlogged and the pool is saturated (or recent queue p95 exceeds
+  target), reap containers idle past the TTL — and dispatch steals
+  across workers instead of waiting on the preferred one.
 * **Bounded in-flight concurrency + retries + stragglers.** At most
   ``max_in_flight`` invocations run concurrently; a failed invocation
   retries with jittered exponential backoff on a DIFFERENT worker, and a
@@ -44,10 +60,38 @@ import numpy as np
 from ..core.executor import Executor, JobResult
 from ..core.lineage import Forecast
 from ..core.scheduler import Job, bin_jobs
+from .autoscale import AutoscalePolicy, Autoscaler
 from .backend import InlineBackend, InvocationBackend
+from .futures import ResponseFuture
 from .monitor import InvocationMonitor
 from .payload import (InvocationPayload, InvocationResult, JobRef,
                       VersionRef, affinity_key)
+
+
+class _Phase:
+    """All mutable state of one phase in flight: the ready queue of
+    not-yet-dispatched invocation copies, the backoff queue, the pool
+    futures actually executing, and the exactly-once bookkeeping
+    (attempts / in-flight copies / winners)."""
+
+    def __init__(self, invocations: List[dict], results: List[JobResult]):
+        self.results = results
+        self.ready: List[dict] = []
+        self.deferred: List[tuple] = []    # (ready_at, inv) backoff queue
+        self.pending: Dict[object, dict] = {}   # pool future -> inv
+        self.attempts: Dict[str, int] = {}      # iid -> copies created
+        self.inflight: Dict[str, int] = {}      # iid -> copies not settled
+        self.done_ids: set = set()
+        self.durations: List[float] = []
+        self.started: Dict[int, float] = {}     # token -> dispatch time
+        self.backups: Dict[str, bool] = {}
+        self.busy: Dict[str, int] = {}          # worker -> in-flight count
+        self.futures: Dict[str, ResponseFuture] = {
+            inv["payload"].invocation_id:
+                ResponseFuture(inv["payload"].invocation_id,
+                               payload=inv["payload"])
+            for inv in invocations}
+        self.tokens = iter(range(1 << 30))
 
 
 class ServerlessInvoker:
@@ -56,6 +100,7 @@ class ServerlessInvoker:
                  max_retries: int = 2, backoff_base_s: float = 0.05,
                  straggler_factor: float = 4.0, straggler_min_s: float = 2.0,
                  speculative: bool = True, seed: int = 0,
+                 autoscale: Optional[AutoscalePolicy] = None,
                  monitor: Optional[InvocationMonitor] = None):
         self.system = system
         self.backend = backend
@@ -67,6 +112,8 @@ class ServerlessInvoker:
         self.straggler_min_s = float(straggler_min_s)
         self.speculative = speculative
         self.monitor = monitor or InvocationMonitor()
+        self.autoscaler = (Autoscaler(backend, autoscale, self.monitor)
+                           if autoscale is not None else None)
         self._rng = random.Random(seed)
         self._affinity: Dict[tuple, str] = {}
         self._rr = 0
@@ -79,7 +126,36 @@ class ServerlessInvoker:
         scores = [j for j in jobs if j.task != "train"]
         for phase in (trains, scores):        # global train->score barrier
             out.extend(self._run_phase(phase))
+        if self.autoscaler is not None:
+            self.autoscaler.reap_idle()
         return out
+
+    def submit(self, jobs: List[Job]) -> List[ResponseFuture]:
+        """Async single-phase submission: one ``ResponseFuture`` per
+        aggregated invocation, driven by a daemon thread. Each future
+        completes AFTER the invoker has absorbed that action's effects,
+        so a completed future's forecasts/versions are already queryable
+        — the streaming surface ``futures.wait(..., ANY_COMPLETED)``
+        consumes. Jobs that fail planning (score with no trained version)
+        are marked failed at the scheduler and re-fire there; mixing
+        train and score in one submission is rejected because the
+        train->score barrier cannot be enforced asynchronously."""
+        tasks = {j.task == "train" for j in jobs}
+        if len(tasks) > 1:
+            raise ValueError(
+                "submit() is single-phase: train and score jobs cannot "
+                "share one async submission (train->score barrier); "
+                "use run() or two submit() calls")
+        results: List[JobResult] = []
+        invocations = self._plan(jobs, results)
+        state = _Phase(invocations, results)
+        state.ready.extend(self._enqueue_all(state, invocations))
+        futures = [state.futures[inv["payload"].invocation_id]
+                   for inv in invocations]
+        t = threading.Thread(target=self._drive, args=(state,),
+                             name="serverless-invoker-drive", daemon=True)
+        t.start()
+        return futures
 
     # ------------------------------------------------ planning
     def _plan(self, jobs: List[Job], results: List[JobResult]
@@ -154,6 +230,101 @@ class ServerlessInvoker:
                 cut(w, cur)
         return invocations
 
+    # ------------------------------------------------ dispatch
+    def _enqueue_all(self, state: _Phase,
+                     invocations: List[dict]) -> List[dict]:
+        for inv in invocations:
+            iid = inv["payload"].invocation_id
+            state.attempts[iid] = state.attempts.get(iid, 0) + 1
+            state.inflight[iid] = state.inflight.get(iid, 0) + 1
+        return list(invocations)
+
+    def _enqueue(self, state: _Phase, inv: dict, *,
+                 delay_s: float = 0.0) -> None:
+        """Create one more copy of an invocation (initial, retry or
+        backup). Attempt accounting happens HERE — a copy waiting out its
+        backoff still counts against the budget and against in-flight
+        copies, so a concurrently failing sibling can neither overspend
+        retries nor declare final failure while a retry is pending."""
+        iid = inv["payload"].invocation_id
+        state.attempts[iid] = state.attempts.get(iid, 0) + 1
+        state.inflight[iid] = state.inflight.get(iid, 0) + 1
+        if delay_s > 0:
+            state.deferred.append((time.perf_counter() + delay_s, inv))
+        else:
+            state.ready.append(inv)
+
+    def _pick_worker(self, state: _Phase, inv: dict, live: List[str],
+                     idle: List[str]) -> Optional[str]:
+        """Late-bound routing: the planned worker if it is live and idle;
+        with an autoscaler (or when the planned worker was reaped) any
+        idle live worker — work-stealing is what lets a freshly
+        provisioned container drain the backlog. With a fixed fleet,
+        dispatch WAITS for the preferred worker instead, keeping sticky
+        routing (and its warm FleetRuntime reuse) deterministic."""
+        pref = inv.get("worker")
+        if pref in idle:
+            return pref
+        if pref in live and self.autoscaler is None:
+            return None
+        cands = [w for w in idle if w != inv.get("avoid")] or idle
+        pick = cands[self._rr % len(cands)]
+        self._rr += 1
+        return pick
+
+    def _dispatch(self, state: _Phase, pool: ThreadPoolExecutor) -> None:
+        """One forward pass over the ready queue. Dispatching only
+        CONSUMES capacity (workers get busier, pending fills), so
+        re-scanning after a dispatch can never unlock an earlier-stuck
+        item — a single pass reaches the same fixed point as a restart
+        loop without the O(ready^2) rescans a 10k-invocation agg=1
+        sweep would otherwise pay on every settle."""
+        live = self.backend.worker_ids()
+        keep: List[dict] = []
+        for k, inv in enumerate(state.ready):
+            iid = inv["payload"].invocation_id
+            if iid in state.done_ids:          # a sibling copy already won
+                state.inflight[iid] -= 1
+                continue
+            fut = state.futures.get(iid)
+            if fut is not None and fut.cancelled:
+                state.inflight[iid] -= 1
+                self._finalize_cancel(state, inv)
+                continue
+            idle = [w for w in live if state.busy.get(w, 0) == 0]
+            if not idle or len(state.pending) >= self.max_in_flight:
+                keep.extend(state.ready[k:])   # nothing can dispatch now
+                break
+            w = self._pick_worker(state, inv, live, idle)
+            if w is None:
+                keep.append(inv)               # stuck on a busy preferred
+                continue                       # worker; later items may go
+            token = next(state.tokens)
+            inv = {**inv, "worker": w, "token": token}
+            state.busy[w] = state.busy.get(w, 0) + 1
+            state.started[token] = time.perf_counter()
+            if self.autoscaler is not None:
+                self.autoscaler.note_dispatch(w)
+            f = pool.submit(self.backend.invoke, inv["payload"], w)
+            state.pending[f] = inv
+        state.ready[:] = keep
+
+    def _finalize_cancel(self, state: _Phase, inv: dict) -> None:
+        """A cancelled invocation stops consuming budget: no more copies,
+        jobs marked failed so the scheduler re-fires each occurrence at
+        its own boundary. Late effects of a copy that already ran are
+        absorbed by store idempotency."""
+        iid = inv["payload"].invocation_id
+        if iid in state.done_ids:
+            return
+        state.done_ids.add(iid)
+        for ref in inv["payload"].jobs:
+            job = ref.to_job()
+            self.system.scheduler.mark_failed(job)
+            state.results.append(JobResult(
+                job, False, 0.0, attempts=state.attempts.get(iid, 0),
+                error="invocation cancelled"))
+
     # ------------------------------------------------ execution
     def _run_phase(self, jobs: List[Job]) -> List[JobResult]:
         if not jobs:
@@ -162,160 +333,163 @@ class ServerlessInvoker:
         invocations = self._plan(jobs, results)
         if not invocations:
             return results
+        state = _Phase(invocations, results)
+        state.ready.extend(self._enqueue_all(state, invocations))
+        self._drive(state)
+        return results
+
+    def _other_worker(self, cur: str) -> str:
         workers = self.backend.worker_ids()
-        done_ids: set = set()
-        durations: List[float] = []
-        started: Dict[int, float] = {}        # token -> actual start time
-        attempts: Dict[str, int] = {}         # invocation_id -> submissions
-        inflight: Dict[str, int] = {}
-        backups: Dict[str, bool] = {}
-        deferred: List[tuple] = []            # (ready_at, inv) backoff queue
-        tokens = iter(range(1 << 30))
-
-        def attempt(inv: dict, token: int):
-            started[token] = time.perf_counter()
-            return self.backend.invoke(inv["payload"], inv["worker"])
-
-        def submit(pool, pending, inv, *, delay_s=0.0):
-            """Attempt accounting happens HERE (including deferred
-            retries: a deferred copy still counts against the budget and
-            against in-flight-copies, so a concurrently failing sibling
-            can neither overspend retries nor declare final failure while
-            a retry is waiting out its backoff). The backoff itself is
-            served from the main wait loop — a sleeping retry must not
-            occupy one of the max_in_flight pool slots."""
-            iid = inv["payload"].invocation_id
-            attempts[iid] = attempts.get(iid, 0) + 1
-            inflight[iid] = inflight.get(iid, 0) + 1
-            if delay_s > 0:
-                deferred.append((time.perf_counter() + delay_s, inv))
-                return
-            token = next(tokens)
-            inv = {**inv, "token": token}
-            f = pool.submit(attempt, inv, token)
-            pending[f] = inv
-
-        def other_worker(cur: str) -> str:
-            if len(workers) == 1:
-                return cur
+        if len(workers) <= 1:
+            return cur
+        pick = workers[self._rr % len(workers)]
+        self._rr += 1
+        if pick == cur:
             pick = workers[self._rr % len(workers)]
             self._rr += 1
-            if pick == cur:
-                pick = workers[self._rr % len(workers)]
-                self._rr += 1
-            return pick
+        return pick
 
+    def _drive(self, state: _Phase) -> None:
         with ThreadPoolExecutor(max_workers=self.max_in_flight) as pool:
-            pending: Dict[object, dict] = {}
-            for inv in invocations:
-                submit(pool, pending, inv)
-            while pending or deferred:
-                if deferred:              # release retries whose backoff
-                    now_d = time.perf_counter()    # elapsed
-                    due = [d for d in deferred if d[0] <= now_d]
-                    deferred = [d for d in deferred if d[0] > now_d]
+            while state.ready or state.deferred or state.pending:
+                if state.deferred:    # release retries whose backoff
+                    now_d = time.perf_counter()         # elapsed
+                    due = [d for d in state.deferred if d[0] <= now_d]
+                    state.deferred = [d for d in state.deferred
+                                      if d[0] > now_d]
                     for _, inv in due:
                         iid_d = inv["payload"].invocation_id
-                        if iid_d in done_ids:
+                        if iid_d in state.done_ids:
                             # a sibling copy won while this retry was
                             # backing off: drop it (and its in-flight
                             # claim) instead of re-running the action
-                            inflight[iid_d] -= 1
+                            state.inflight[iid_d] -= 1
                             continue
-                        token = next(tokens)
-                        inv = {**inv, "token": token}
-                        f = pool.submit(attempt, inv, token)
-                        pending[f] = inv
-                    if not pending:       # all runnable work is backing off
-                        if deferred:      # (or was just dropped as won)
-                            time.sleep(max(0.0, min(t for t, _ in deferred)
-                                           - time.perf_counter()))
-                        continue
+                        state.ready.append(inv)
+                self._dispatch(state, pool)
+                if self.autoscaler is not None:
+                    self.autoscaler.observe(backlog=len(state.ready),
+                                            busy=dict(state.busy))
+                    if state.ready:    # a scale-out makes new slots idle
+                        self._dispatch(state, pool)
+                if not state.pending:
+                    if state.deferred:  # all runnable work is backing off
+                        time.sleep(max(0.0, min(
+                            t for t, _ in state.deferred)
+                            - time.perf_counter()))
+                    elif state.ready:   # no live idle worker to take it
+                        time.sleep(0.005)
+                    continue
                 timeout = self.straggler_min_s
-                if deferred:
+                if self.autoscaler is not None and state.ready:
+                    # keep the scale-out decision loop responsive while
+                    # work is backlogged
+                    timeout = min(timeout, 0.05)
+                if state.deferred:
                     timeout = max(0.005, min(
-                        timeout, min(t for t, _ in deferred)
+                        timeout, min(t for t, _ in state.deferred)
                         - time.perf_counter()))
-                done, _ = wait(list(pending), timeout=timeout,
+                done, _ = wait(list(state.pending), timeout=timeout,
                                return_when=FIRST_COMPLETED)
                 for f in done:
-                    inv = pending.pop(f)
-                    payload = inv["payload"]
-                    iid = payload.invocation_id
-                    inflight[iid] -= 1
-                    try:
-                        result = f.result()
-                    except Exception as e:  # noqa: BLE001
-                        self.monitor.record(
-                            payload=payload, worker_id=inv["worker"],
-                            error=f"{type(e).__name__}: {e}",
-                            retried=inv.get("retried", False),
-                            speculative=inv.get("speculative", False))
-                        if iid in done_ids:
-                            continue          # a sibling copy already won
-                        if attempts[iid] <= self.max_retries:
-                            retry = dict(inv)
-                            retry["worker"] = other_worker(inv["worker"])
-                            retry["retried"] = True
-                            retry["payload"] = replace(
-                                payload, attempt=attempts[iid] + 1,
-                                created_at=time.time())
-                            delay = (self.backoff_base_s
-                                     * (2 ** (attempts[iid] - 1))
-                                     * (1.0 + self._rng.random()))
-                            submit(pool, pending, retry, delay_s=delay)
-                        elif inflight[iid] == 0:
-                            # every copy burned: the whole action fails,
-                            # each job re-fires at its own boundary
-                            for ref in payload.jobs:
-                                job = ref.to_job()
-                                self.system.scheduler.mark_failed(job)
-                                results.append(JobResult(
-                                    job, False, 0.0,
-                                    attempts=attempts[iid],
-                                    error=f"invocation failed: "
-                                          f"{type(e).__name__}: {e}"))
-                        continue
-                    self.monitor.record(
-                        payload=payload, result=result,
-                        worker_id=result.worker_id,
-                        retried=inv.get("retried", False),
-                        speculative=inv.get("speculative", False))
-                    if iid in done_ids:
-                        continue              # speculation loser: effects
-                    done_ids.add(iid)         # already deduped by stores
-                    dur = result.finished_at - result.started_at
-                    durations.append(dur)
-                    for ak in inv["aks"]:     # affinity follows success
-                        self._affinity[ak] = result.worker_id
-                    results.extend(self._absorb(inv, result,
-                                                attempts[iid]))
-                # straggler resubmission (MapReduce-style backup copies).
-                # Pointless with a single worker: backends run one action
-                # per worker at a time, so a backup would just queue
-                # behind the very straggler it is meant to outrun.
-                if not self.speculative or not durations \
-                        or len(workers) == 1:
-                    continue
-                med = float(np.median(durations))
-                thresh = max(self.straggler_min_s,
-                             self.straggler_factor * med)
-                now = time.perf_counter()
-                for f, inv in list(pending.items()):
-                    iid = inv["payload"].invocation_id
-                    t0 = started.get(inv["token"])
-                    if t0 is None or iid in done_ids or backups.get(iid) \
-                            or attempts[iid] > self.max_retries \
-                            or now - t0 <= thresh:
-                        continue
-                    backups[iid] = True
-                    backup = dict(inv)
-                    backup["worker"] = other_worker(inv["worker"])
-                    backup["speculative"] = True
-                    backup["payload"] = replace(inv["payload"],
-                                                created_at=time.time())
-                    submit(pool, pending, backup)
-        return results
+                    self._settle(state, f)
+                self._maybe_backup(state)
+
+    def _settle(self, state: _Phase, f) -> None:
+        inv = state.pending.pop(f)
+        payload = inv["payload"]
+        iid = payload.invocation_id
+        state.inflight[iid] -= 1
+        state.busy[inv["worker"]] = max(0, state.busy.get(inv["worker"], 1)
+                                        - 1)
+        if self.autoscaler is not None:
+            self.autoscaler.note_done(inv["worker"])
+        fut = state.futures.get(iid)
+        try:
+            result = f.result()
+        except Exception as e:  # noqa: BLE001
+            self.monitor.record(
+                payload=payload, worker_id=inv["worker"],
+                error=f"{type(e).__name__}: {e}",
+                retried=inv.get("retried", False),
+                speculative=inv.get("speculative", False))
+            if iid in state.done_ids:
+                return                # a sibling copy already won
+            if fut is not None and fut.cancelled:
+                self._finalize_cancel(state, inv)
+                return
+            if state.attempts[iid] <= self.max_retries:
+                retry = dict(inv)
+                retry["avoid"] = inv["worker"]
+                retry["worker"] = self._other_worker(inv["worker"])
+                retry["retried"] = True
+                retry["payload"] = replace(
+                    payload, attempt=state.attempts[iid] + 1,
+                    created_at=time.time())
+                delay = (self.backoff_base_s
+                         * (2 ** (state.attempts[iid] - 1))
+                         * (1.0 + self._rng.random()))
+                self._enqueue(state, retry, delay_s=delay)
+            elif state.inflight[iid] == 0:
+                # every copy burned: the whole action fails, each job
+                # re-fires at its own boundary
+                state.done_ids.add(iid)
+                for ref in payload.jobs:
+                    job = ref.to_job()
+                    self.system.scheduler.mark_failed(job)
+                    state.results.append(JobResult(
+                        job, False, 0.0, attempts=state.attempts[iid],
+                        error=f"invocation failed: "
+                              f"{type(e).__name__}: {e}"))
+                if fut is not None:
+                    fut._set_error(e)
+            return
+        self.monitor.record(
+            payload=payload, result=result, worker_id=result.worker_id,
+            retried=inv.get("retried", False),
+            speculative=inv.get("speculative", False))
+        if iid in state.done_ids:
+            return                    # speculation loser: effects already
+        if fut is not None and fut.cancelled:   # deduped by stores
+            self._finalize_cancel(state, inv)
+            return
+        state.done_ids.add(iid)
+        state.durations.append(result.finished_at - result.started_at)
+        for ak in inv["aks"]:         # affinity follows success
+            self._affinity[ak] = result.worker_id
+        state.results.extend(self._absorb(inv, result,
+                                          state.attempts[iid]))
+        if fut is not None:           # effects are persisted BEFORE the
+            fut._set_result(result)   # future completes: streaming reads
+            # of a done future's forecasts/versions always hit the stores
+
+    def _maybe_backup(self, state: _Phase) -> None:
+        """Straggler resubmission (MapReduce-style backup copies).
+        Pointless with a single worker: backends run one action per
+        worker at a time, so a backup would just queue behind the very
+        straggler it is meant to outrun."""
+        if not self.speculative or not state.durations \
+                or len(self.backend.worker_ids()) <= 1:
+            return
+        med = float(np.median(state.durations))
+        thresh = max(self.straggler_min_s, self.straggler_factor * med)
+        now = time.perf_counter()
+        for f, inv in list(state.pending.items()):
+            iid = inv["payload"].invocation_id
+            t0 = state.started.get(inv["token"])
+            if t0 is None or iid in state.done_ids \
+                    or state.backups.get(iid) \
+                    or state.attempts[iid] > self.max_retries \
+                    or now - t0 <= thresh:
+                continue
+            state.backups[iid] = True
+            backup = dict(inv)
+            backup["avoid"] = inv["worker"]
+            backup["worker"] = self._other_worker(inv["worker"])
+            backup["speculative"] = True
+            backup["payload"] = replace(inv["payload"],
+                                        created_at=time.time())
+            self._enqueue(state, backup)
 
     # ------------------------------------------------ absorption
     def _absorb(self, inv: dict, result: InvocationResult,
@@ -364,24 +538,63 @@ class ServerlessInvoker:
 class ServerlessExecutor(Executor):
     """Executor-protocol facade: ``run(jobs) -> List[JobResult]`` like
     LocalPool/Fleet, but through the serverless invocation pipeline.
-    Default backend is the deterministic in-process ``InlineBackend``;
-    pass a ``ProcessBackend`` for real OS-level containers. Long-lived:
-    keep ONE instance across polls so warm-container affinity pays
-    (``Castor.serverless_executor()`` does this)."""
+    Default backend is the deterministic in-process ``InlineBackend``
+    (optionally storage-mediated and/or chaos-injected); pass a
+    ``ProcessBackend`` for real OS-level containers. ``run_async`` is the
+    futures surface; with an ``AutoscalePolicy`` the pool is elastic.
+    Long-lived: keep ONE instance across polls so warm-container affinity
+    pays (``Castor.serverless_executor()`` does this)."""
 
     def __init__(self, system, *, backend: Optional[InvocationBackend] = None,
-                 n_workers: int = 4,
+                 n_workers: int = 4, storage=None, chaos=None,
+                 autoscale: Optional[AutoscalePolicy] = None,
                  monitor: Optional[InvocationMonitor] = None, **invoker_kw):
-        self.backend = backend or InlineBackend(system, n_workers=n_workers)
+        if backend is None:
+            backend = InlineBackend(system, n_workers=n_workers,
+                                    storage=storage, chaos=chaos)
+        elif storage is not None or chaos is not None:
+            raise ValueError(
+                "storage/chaos apply to the default InlineBackend; "
+                "configure an explicit backend directly")
+        self.backend = backend
         self.monitor = monitor or InvocationMonitor()
         self.invoker = ServerlessInvoker(system, self.backend,
-                                         monitor=self.monitor, **invoker_kw)
+                                         monitor=self.monitor,
+                                         autoscale=autoscale, **invoker_kw)
 
     def run(self, jobs: List[Job]) -> List[JobResult]:
         return self.invoker.run(jobs)
 
+    def run_async(self, jobs: List[Job]) -> List[ResponseFuture]:
+        """Single-phase async submission; see ``ServerlessInvoker.submit``
+        and ``repro.serverless.futures.wait``."""
+        return self.invoker.submit(jobs)
+
+    def reap_idle(self) -> List[str]:
+        """Reap idle-past-TTL containers now (autoscaled executors only;
+        no-op otherwise). The invoker also reaps at the end of ``run``."""
+        a = self.invoker.autoscaler
+        return a.reap_idle() if a is not None else []
+
     def stats(self) -> dict:
-        return self.monitor.summary()
+        out = self.monitor.summary()
+        out["workers"] = len(self.backend.worker_ids())
+        if self.invoker.autoscaler is not None:
+            out["autoscale"] = self.invoker.autoscaler.summary()
+        chaos = getattr(self.backend, "chaos", None)
+        if chaos is not None:
+            out["chaos"] = chaos.summary()
+        storage = getattr(self.backend, "storage", None)
+        if storage is not None:
+            out["storage"] = storage.stats()
+        return out
 
     def close(self) -> None:
         self.backend.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -67,6 +67,14 @@ class InvocationMonitor:
             else:
                 self.dropped += 1
 
+    def recent_queue_p95(self, window: int = 64) -> float:
+        """p95 queue latency (enqueue -> worker pickup) over the last
+        ``window`` successful invocations — the autoscaler's scale-out
+        signal (``repro.serverless.autoscale``)."""
+        with self._lock:
+            recs = self.records[-window:]
+        return self._pctl([r["queue_s"] for r in recs if r.get("ok")], 0.95)
+
     @staticmethod
     def _pctl(xs: List[float], q: float) -> float:
         if not xs:

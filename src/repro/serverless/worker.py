@@ -9,9 +9,14 @@ handoff) persists for the worker's lifetime, which is why the invoker's
 sticky routing pays: the second invocation of a bin on the same worker is
 an O(delta) warm poll, on a different worker a cold rebuild.
 
-``Worker.execute`` is shared by both backends; ``_process_worker_main``
-is the long-lived loop a spawned container runs (JSON payloads in, JSON
-results out — the wire format proves statelessness).
+``Worker.execute`` is shared by both backends and is where execution-side
+chaos injects: an injected *delay* stalls before execution (straggler),
+an injected *kill* executes a strict prefix of the action's bins — their
+effects persist — and then raises ``ChaosKill``, modelling a container
+preempted mid-action. ``_process_worker_main`` is the long-lived loop a
+spawned container runs; with a storage root it resolves payload KEYS
+against the shared ``FilesystemStorage`` bucket and ships results back
+the same way (JSON over the pipe otherwise).
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from .chaos import ChaosKill, ChaosPolicy
 from .payload import (ForecastBlob, InvocationPayload, InvocationResult,
                       JobOutcome, JobRef, VersionRef)
 
@@ -42,7 +48,8 @@ class Worker:
                                                max_parallel=max_parallel))
         self.invocations = 0
 
-    def execute(self, payload: InvocationPayload) -> InvocationResult:
+    def execute(self, payload: InvocationPayload,
+                chaos: Optional[ChaosPolicy] = None) -> InvocationResult:
         started = time.time()
         cold = self.invocations == 0
         self.invocations += 1
@@ -54,6 +61,24 @@ class Worker:
                                       trained_at=vr.trained_at,
                                       metadata={"delivered": True})
         jobs = [r.to_job() for r in payload.jobs]
+        if chaos is not None:
+            chaos.maybe_delay(payload)
+            kill_after = chaos.kill_point(payload)
+            if kill_after is not None:
+                # execute a strict PREFIX of the action's bins, persist
+                # their effects, then die: the retry re-runs the whole
+                # action and the persisted prefix must no-op at the
+                # idempotent stores (the exactly-once invariant's
+                # hardest case)
+                groups: Dict[tuple, List] = {}
+                for j in jobs:
+                    groups.setdefault(j.bin_key, []).append(j)
+                for bin_jobs_ in list(groups.values())[:kill_after]:
+                    self.executor.run(bin_jobs_)
+                raise ChaosKill(
+                    f"chaos: {self.worker_id} killed after "
+                    f"{kill_after}/{len(groups)} bins of "
+                    f"{payload.invocation_id}")
         results = self.executor.run(jobs)
         outcomes = tuple(
             JobOutcome(ref=JobRef.from_job(r.job), ok=r.ok,
@@ -97,16 +122,22 @@ class Worker:
 
 
 def _process_worker_main(task_q, result_q, factory, worker_id: str,
-                         env: Optional[Dict[str, str]] = None) -> None:
+                         env: Optional[Dict[str, str]] = None,
+                         storage_root: Optional[str] = None) -> None:
     """Entry point of a spawned worker container. ``factory`` is a
     picklable zero-arg callable reconstructing the worker's system replica
     (its 'connection to shared storage'): spawned processes share no
     memory, so determinism of the factory is what stands in for a real
-    shared backend. Loop: JSON payload in -> execute -> JSON result out;
-    ``None`` is the shutdown sentinel."""
+    shared backend. ``storage_root`` names the shared filesystem bucket
+    for storage-mediated transport (payload keys in, result keys out);
+    without it, raw JSON strings cross the pipe. ``None`` is the shutdown
+    sentinel either way."""
     for k, v in (env or {}).items():
         os.environ[k] = v
     try:
+        from .storage import (FilesystemStorage, get_payload, put_result)
+        storage = (FilesystemStorage(storage_root)
+                   if storage_root is not None else None)
         system = factory()
         worker = Worker(worker_id, system, collect_artifacts=True)
         result_q.put(("ready", worker_id))
@@ -119,10 +150,17 @@ def _process_worker_main(task_q, result_q, factory, worker_id: str,
             return
         iid = ""
         try:
-            payload = InvocationPayload.from_json(msg)
+            if isinstance(msg, tuple) and msg[0] == "ref":
+                payload = get_payload(storage, msg[1])
+            else:
+                payload = InvocationPayload.from_json(msg)
             iid = payload.invocation_id
             result = worker.execute(payload)
-            result_q.put(("result", iid, result.to_json()))
+            if storage is not None:
+                key = put_result(storage, result, payload.attempt)
+                result_q.put(("result-ref", iid, key))
+            else:
+                result_q.put(("result", iid, result.to_json()))
         except BaseException as e:  # noqa: BLE001 — ship the error back,
             # tagged with the invocation it belongs to so the backend can
             # never attribute a stale predecessor's error to a later call

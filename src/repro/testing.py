@@ -67,6 +67,71 @@ def run_polls(c, k: int, *, executor=None, t0: float = FLEET_NOW,
     return ex
 
 
+def _canon(obj):
+    """Canonical bitwise-comparable form of a params pytree / array: every
+    array becomes (dtype, shape, raw bytes), dicts sort by key. Two objects
+    canonicalizing equal are BITWISE equal — no tolerance anywhere."""
+    import numpy as np
+    if isinstance(obj, dict):
+        return ("dict", tuple((k, _canon(v))
+                              for k, v in sorted(obj.items())))
+    if isinstance(obj, (list, tuple)):
+        return ("seq", tuple(_canon(v) for v in obj))
+    if hasattr(obj, "dtype") and hasattr(obj, "shape"):
+        a = np.asarray(obj)
+        return ("arr", str(a.dtype), tuple(a.shape), a.tobytes())
+    return ("val", obj)
+
+
+def snapshot_stores(c) -> dict:
+    """Bitwise snapshot of a castor's ModelVersionStore + PredictionStore:
+    per deployment, every version's (version, trained_at, params bytes) and
+    every forecast's (created_at, model_version, rank, times/values bytes),
+    sorted by occurrence stamp so executor completion order cannot leak in.
+    Two runs with identical effects produce identical snapshots — the
+    exactly-once equivalence surface the chaos suite asserts on."""
+    versions = {}
+    for name in sorted(getattr(c.versions, "_versions", {})):
+        versions[name] = tuple(
+            (mv.version, float(mv.trained_at), _canon(mv.params))
+            for mv in sorted(c.versions.history(name),
+                             key=lambda mv: (mv.trained_at, mv.version)))
+    forecasts = {}
+    for name in sorted(getattr(c.predictions, "_by_dep", {})):
+        forecasts[name] = tuple(
+            (float(fc.created_at), fc.model_version, fc.rank, fc.signal,
+             fc.entity, _canon(fc.times), _canon(fc.values))
+            for fc in sorted(c.predictions.history(name),
+                             key=lambda fc: fc.created_at))
+    return {"versions": versions, "forecasts": forecasts}
+
+
+def assert_stores_bitwise_equal(c_ref, c_got, *, context: str = "") -> None:
+    """Assert two castors' model-version + prediction stores are bitwise
+    identical (same deployments, same occurrences, same params/forecast
+    BYTES). Either argument may be a castor or an already-taken
+    ``snapshot_stores`` snapshot (the chaos suite caches its fault-free
+    baselines that way). Failure messages name the first diverging
+    deployment rather than dumping two full snapshots."""
+    def _snap(x):
+        return x if isinstance(x, dict) and "versions" in x \
+            else snapshot_stores(x)
+    ref, got = _snap(c_ref), _snap(c_got)
+    for kind in ("versions", "forecasts"):
+        assert set(ref[kind]) == set(got[kind]), \
+            (f"{context}: {kind} deployment sets differ: "
+             f"{sorted(set(ref[kind]) ^ set(got[kind]))}")
+        for name in ref[kind]:
+            r, g = ref[kind][name], got[kind][name]
+            assert len(r) == len(g), \
+                (f"{context}: {name} has {len(g)} {kind}, expected "
+                 f"{len(r)} — duplicate or lost effects")
+            for i, (re_, ge) in enumerate(zip(r, g)):
+                assert re_ == ge, \
+                    (f"{context}: {name} {kind}[{i}] diverges "
+                     f"(stamp {ge[0] if ge else '?'} vs {re_[0]})")
+
+
 def build_fleet_castor(kind: str, cls, hp: dict, mesh_opt: str, *,
                        n: int = 6, seed: int = 9, site: str = "Z",
                        run: bool = True):

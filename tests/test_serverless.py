@@ -220,6 +220,39 @@ def test_payload_and_result_roundtrip_json_bitwise():
 
 
 # ------------------------------------------------------------ process
+def _mini_castor():
+    """Cheapest possible picklable system factory: spawn-handshake tests
+    only need the worker process to come up, not to model anything."""
+    return Castor()
+
+
+def test_process_backend_workers_reaped_on_gc():
+    """Regression: a ProcessBackend leaked by a crashed invoker (or a
+    test failing mid-run) used to orphan its spawned workers for the
+    rest of the session. The weakref.finalize teardown must kill them
+    when the backend object is collected — and at interpreter exit."""
+    import gc
+    be = ProcessBackend(_mini_castor, n_workers=1)
+    (proc, _tq, _rq), _lock = be._worker("p0")     # force the spawn
+    assert proc.is_alive()
+    del be                                          # "crash": no close()
+    gc.collect()
+    proc.join(timeout=10.0)
+    assert not proc.is_alive(), "orphaned worker survived backend GC"
+
+
+def test_process_backend_context_manager_reaps_and_cleans_storage():
+    import os
+    with ProcessBackend(_mini_castor, n_workers=1) as be:
+        (proc, _tq, _rq), _lock = be._worker("p0")
+        root = be.storage.root                      # owned "auto" bucket
+        assert proc.is_alive() and os.path.isdir(root)
+    proc.join(timeout=10.0)
+    assert not proc.is_alive()
+    assert not os.path.exists(root)                 # owned bucket removed
+    be.close()                                      # idempotent
+
+
 def test_process_backend_smoke_matches_fleet():
     """Real spawned containers (JSON wire, artifact ship-back): forecasts
     equal the fleet executor's, versions persisted with the invoker's

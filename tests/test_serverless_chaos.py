@@ -1,0 +1,513 @@
+"""Elastic storage-mediated serverless: chaos-proven exactly-once
+execution (tests for repro/serverless/{chaos,storage,futures,autoscale}).
+
+The core claim: under every seeded fault a real serverless platform
+exhibits — kill-mid-action with partial persisted effects, dropped
+results, duplicate delivery, straggler delay — the ModelVersionStore and
+PredictionStore end up BITWISE identical to a fault-free run, because
+at-least-once invocation composes with occurrence-stamped idempotent
+persistence into exactly-once effects. Plus: property tests for the
+object-store payload path, the futures/wait streaming surface, and the
+telemetry-driven autoscaler.
+"""
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.forecast import (ANNForecaster, GAMForecaster, LSTMForecaster,
+                            LinearForecaster)
+from repro.serverless import (ALWAYS, ANY_COMPLETED, AutoscalePolicy,
+                              Autoscaler, ChaosPolicy, FilesystemStorage,
+                              FuturesTimeoutError, InMemoryStorage,
+                              InlineBackend, InvocationMonitor,
+                              InvocationPayload, ResponseFuture,
+                              ServerlessExecutor, StorageKeyError, wait)
+from repro.serverless.payload import (ForecastBlob, InvocationResult,
+                                      JobOutcome, JobRef, VersionRef)
+from repro.serverless.storage import (get_payload, get_result, payload_key,
+                                      put_payload, put_result)
+from repro.testing import (FLEET_NOW as NOW, HOUR,
+                           assert_stores_bitwise_equal, build_steady_castor,
+                           snapshot_stores)
+
+MODELS = {
+    "lr": (LinearForecaster, {}),
+    "gam": (GAMForecaster, {}),
+    "ann": (ANNForecaster, {"hidden": 8, "epochs": 10}),
+    "lstm": (LSTMForecaster, {"hidden": 4, "epochs": 10}),
+}
+POLLS = 3
+N = 3
+
+#: each scenario fires on EVERY invocation's first delivery (prob 1.0,
+#: max_attempt 1) — the retry is clean, so convergence is forced to go
+#: through the fault path, never around it
+CHAOS = {
+    "kill": dict(seed=11, kill_mid_action=1.0),
+    "drop": dict(seed=12, drop_result=1.0),
+    "duplicate": dict(seed=13, duplicate=1.0),
+    "delay": dict(seed=14, delay=1.0, delay_s=0.02),
+}
+
+_BASELINES = {}      # forecaster kind -> fault-free store snapshot
+
+
+def _run_polls(kind, chaos):
+    cls, hp = MODELS[kind]
+    c = build_steady_castor(kind, cls, hp, n=N)
+    ex = ServerlessExecutor(c, n_workers=2, chaos=chaos, max_retries=3,
+                            backoff_base_s=0.01, speculative=False)
+    c._serverless_ex = ex
+    for k in range(POLLS):
+        res = ex.run(c.scheduler.poll(NOW + k * HOUR))
+        assert res and all(r.ok for r in res), \
+            [r.error for r in res if not r.ok]
+    return c, ex
+
+
+def _baseline(kind):
+    if kind not in _BASELINES:
+        c, _ = _run_polls(kind, None)
+        _BASELINES[kind] = snapshot_stores(c)
+    return _BASELINES[kind]
+
+
+# ------------------------------------------------- chaos equivalence
+@pytest.mark.parametrize("fault", list(CHAOS))
+@pytest.mark.parametrize("kind", list(MODELS))
+def test_chaos_run_bitwise_equals_fault_free(kind, fault):
+    """Acceptance: for every seeded chaos scenario and every forecaster,
+    3 polls under injected faults leave the version + prediction stores
+    bitwise identical to the fault-free inline run."""
+    chaos = ChaosPolicy(**CHAOS[fault])
+    c, ex = _run_polls(kind, chaos)
+    assert chaos.summary().get(fault, 0) >= 1, chaos.summary()
+    s = ex.stats()
+    if fault in ("kill", "drop"):      # these fail the delivery: retried
+        assert s["retries"] >= 1 and s["failed_invocations"] >= 1
+    assert s["chaos"][fault] >= 1      # surfaced through executor stats
+    assert_stores_bitwise_equal(_baseline(kind), c,
+                                context=f"{kind}/{fault}")
+
+
+def test_chaos_draws_are_deterministic():
+    """Same (seed, invocation, attempt) -> same decisions, regardless of
+    call order or thread interleaving; different seed -> different set."""
+    def draws(seed):
+        pol = ChaosPolicy(seed=seed, kill_mid_action=0.2, drop_result=0.2,
+                          duplicate=0.2, delay=0.2, delay_s=0.0)
+        out = []
+        for i in range(40):
+            p = InvocationPayload(invocation_id=f"inv-{i:06d}", jobs=())
+            out.append((pol.kill_point(p), pol.should_drop(p),
+                        pol.should_duplicate(p),
+                        pol.maybe_delay(p) > 0.0))
+        return out
+    a, b = draws(5), draws(5)
+    assert a == b
+    assert a != draws(6)
+    assert any(x != (None, False, False, False) for x in a)
+    assert any(x == (None, False, False, False) for x in a)
+
+
+def test_chaos_respects_max_attempt():
+    pol = ChaosPolicy(seed=0, kill_mid_action=1.0, drop_result=1.0,
+                      max_attempt=1)
+    first = InvocationPayload(invocation_id="inv-1", jobs=(), attempt=1)
+    retry = InvocationPayload(invocation_id="inv-1", jobs=(), attempt=2)
+    assert pol.kill_point(first) is not None and pol.should_drop(first)
+    assert pol.kill_point(retry) is None and not pol.should_drop(retry)
+
+
+class _KillSecondBin(ChaosPolicy):
+    """Kill every multi-bin action's first delivery after EXACTLY one
+    completed bin — forces the partial-persisted-effects retry path that
+    random seeds may or may not reach (a steady poll's single-bin actions
+    can only die before any effect)."""
+
+    def kill_point(self, payload):
+        if payload.attempt > self.max_attempt or payload.n_bins < 2:
+            return None
+        with self._lock:
+            self.injected["kill"] = self.injected.get("kill", 0) + 1
+        return 1
+
+
+def test_kill_mid_multibin_action_retries_partial_effects():
+    """A catch-up action carrying 3 whole bins dies after persisting bin
+    1; the retry re-executes ALL 3 bins and the persisted prefix must
+    no-op at the stores — bitwise equal to the fault-free run, no
+    duplicate or lost occurrence."""
+    def run(chaos):
+        c = build_steady_castor("lr", LinearForecaster, {}, n=4)
+        ex = ServerlessExecutor(c, n_workers=2, chaos=chaos, max_retries=3,
+                                backoff_base_s=0.01, speculative=False)
+        c._serverless_ex = ex
+        assert all(r.ok for r in ex.run(c.scheduler.poll(NOW)))
+        # 3h stall: one aggregated catch-up action with 3 whole score bins
+        res = ex.run(c.scheduler.poll(NOW + 3 * HOUR))
+        assert len(res) == 12 and all(r.ok for r in res), \
+            [r.error for r in res if not r.ok]
+        return c, ex
+    ref, _ = run(None)
+    chaos = _KillSecondBin()
+    got, ex = run(chaos)
+    assert chaos.summary()["kill"] >= 1
+    assert ex.stats()["retries"] >= 1
+    assert_stores_bitwise_equal(ref, got, context="multibin-kill")
+
+
+# ------------------------------------------------- storage properties
+_DTYPES = ("float32", "float64", "int32", "int64")
+
+
+def _roundtrip_payload(storage, vals, dtype_i, attempt):
+    arr = np.asarray(vals, dtype=_DTYPES[dtype_i])
+    job = JobRef(f"d{dtype_i}", "lr", "1.0", "score", NOW + attempt,
+                 "ENERGY_LOAD", "E0", f"pk{dtype_i}")
+    vr = VersionRef("d0", 1 + attempt, NOW - HOUR,
+                    model_object={"params": {"w": arr},
+                                  "nested": [arr[:1], {"b": arr * 2}],
+                                  "scale": 2.5})
+    p = InvocationPayload(invocation_id=f"inv-{dtype_i}-{attempt}",
+                          jobs=(job,), versions=(vr,),
+                          created_at=1.5, attempt=attempt)
+    q = get_payload(storage, put_payload(storage, p))
+    assert q.invocation_id == p.invocation_id and q.attempt == p.attempt
+    assert q.jobs == p.jobs
+    mo = q.versions[0].model_object
+    for got, ref in ((mo["params"]["w"], arr),
+                     (mo["nested"][0], arr[:1]),
+                     (mo["nested"][1]["b"], arr * 2)):
+        assert got.dtype == ref.dtype and got.shape == ref.shape
+        assert got.tobytes() == ref.tobytes()        # bitwise
+    assert mo["scale"] == 2.5
+
+    res = InvocationResult(
+        invocation_id=p.invocation_id, worker_id="w0", cold_start=False,
+        started_at=2.0, finished_at=3.0,
+        outcomes=(JobOutcome(ref=job, ok=True, duration_s=0.1),),
+        forecasts=(ForecastBlob(
+            deployment_name=job.deployment_name, signal=job.signal,
+            entity=job.entity, created_at=job.scheduled_at,
+            times=np.asarray(vals, dtype="float64"),
+            values=arr.astype("float64") * 0.5, model_version=1),))
+    r = get_result(storage, put_result(storage, res, p.attempt))
+    assert r.outcomes == res.outcomes
+    fb, fb0 = r.forecasts[0], res.forecasts[0]
+    assert fb.times.tobytes() == fb0.times.tobytes()
+    assert fb.values.tobytes() == fb0.values.tobytes()
+
+
+@settings(max_examples=20)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                min_size=0, max_size=32),
+       st.integers(min_value=0, max_value=3),
+       st.integers(min_value=1, max_value=4))
+def test_storage_roundtrip_inmemory_bitwise(vals, dtype_i, attempt):
+    _roundtrip_payload(InMemoryStorage(), vals, dtype_i, attempt)
+
+
+@settings(max_examples=10)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                min_size=0, max_size=32),
+       st.integers(min_value=0, max_value=3),
+       st.integers(min_value=1, max_value=4))
+def test_storage_roundtrip_filesystem_bitwise(vals, dtype_i, attempt):
+    # tempdir managed inline: the hypothesis-compat wrapper takes no
+    # pytest fixtures
+    with tempfile.TemporaryDirectory() as root:
+        _roundtrip_payload(FilesystemStorage(root), vals, dtype_i, attempt)
+
+
+def test_storage_semantics():
+    for storage in (InMemoryStorage(), FilesystemStorage()):
+        storage.put("jobs/a/1.json", b"one")
+        storage.put("jobs/a/2.json", b"two")
+        storage.put("results/a/1.json", b"three")
+        assert storage.get("jobs/a/2.json") == b"two"
+        assert storage.list("jobs/") == ["jobs/a/1.json", "jobs/a/2.json"]
+        assert storage.list() == ["jobs/a/1.json", "jobs/a/2.json",
+                                  "results/a/1.json"]
+        storage.put("jobs/a/2.json", b"TWO")          # overwrite
+        assert storage.get("jobs/a/2.json") == b"TWO"
+        assert storage.delete("jobs/a/2.json")
+        assert not storage.delete("jobs/a/2.json")
+        with pytest.raises(StorageKeyError):
+            storage.get("jobs/a/2.json")
+        for bad in ("", "../escape", "a/../b", "a b", "jobs/é"):
+            with pytest.raises(ValueError):
+                storage.put(bad, b"x")
+        st_ = storage.stats()
+        assert st_["objects"] == 2 and st_["puts"] == 4
+        storage.clear()
+        assert storage.list() == []
+        storage.close()
+
+
+def test_filesystem_storage_owned_root_removed_on_close():
+    import os
+    storage = FilesystemStorage()
+    root = storage.root
+    storage.put("jobs/x.json", b"x")
+    assert os.path.isdir(root)
+    storage.close()
+    assert not os.path.exists(root)
+    # a shared (caller-owned) root survives close
+    with tempfile.TemporaryDirectory() as shared:
+        FilesystemStorage(shared).close()
+        assert os.path.isdir(shared)
+
+
+def test_inline_backend_storage_mediated_bitwise():
+    """The inline path with storage mediation (payload and result each
+    round-trip through the object store) stays bitwise equal to the
+    direct path, and the store sees the traffic."""
+    storage = InMemoryStorage()
+    ref, _ = _run_polls("lr", None)
+    cls, hp = MODELS["lr"]
+    c = build_steady_castor("lr", cls, hp, n=N)
+    ex = ServerlessExecutor(c, n_workers=2, storage=storage,
+                            speculative=False)
+    c._serverless_ex = ex
+    for k in range(POLLS):
+        res = ex.run(c.scheduler.poll(NOW + k * HOUR))
+        assert res and all(r.ok for r in res)
+    assert_stores_bitwise_equal(ref, c, context="storage-mediated")
+    st_ = ex.stats()["storage"]
+    assert st_["puts"] >= 2 * st_["gets"] / 2 >= 2    # payloads + results
+    assert st_["bytes_in"] > 0 and st_["bytes_out"] > 0
+    assert storage.list("jobs/") and storage.list("results/")
+    assert payload_key("inv-000001", 1) in storage.list("jobs/")
+
+
+# ------------------------------------------------- futures / wait
+def _complete_later(fut, delay, value):
+    def run():
+        time.sleep(delay)
+        fut._set_result(value)
+    threading.Thread(target=run, daemon=True).start()
+
+
+def test_wait_any_returns_in_completion_order():
+    fs = [ResponseFuture(f"inv-{i}") for i in range(3)]
+    _complete_later(fs[0], 0.30, "slow")
+    _complete_later(fs[1], 0.02, "fast")
+    _complete_later(fs[2], 0.15, "mid")
+    done, pending = wait(fs, return_when=ANY_COMPLETED, timeout=5.0)
+    assert [f.invocation_id for f in done] == ["inv-1"]
+    assert len(pending) == 2
+    done, pending = wait(fs, timeout=5.0)             # ALL_COMPLETED
+    assert not pending
+    assert [f.invocation_id for f in done] == ["inv-1", "inv-2", "inv-0"]
+    assert [f.result() for f in done] == ["fast", "mid", "slow"]
+
+
+def test_wait_always_never_blocks():
+    fs = [ResponseFuture("a"), ResponseFuture("b")]
+    fs[0]._set_result(1)
+    t0 = time.perf_counter()
+    done, pending = wait(fs, return_when=ALWAYS)
+    assert time.perf_counter() - t0 < 0.05
+    assert [f.invocation_id for f in done] == ["a"]
+    assert [f.invocation_id for f in pending] == ["b"]
+
+
+def test_wait_timeout_cancels_pending_and_raises():
+    fs = [ResponseFuture(f"inv-{i}") for i in range(2)]
+    _complete_later(fs[0], 0.02, "ok")
+    with pytest.raises(FuturesTimeoutError) as ei:
+        wait(fs, timeout=0.2)
+    assert [f.invocation_id for f in ei.value.pending] == ["inv-1"]
+    assert fs[1].cancelled and fs[1].done
+    assert fs[1].result(throw_except=False) is None
+    assert fs[0].success and fs[0].result() == "ok"
+    # cancellation is terminal: a late result does not overwrite it
+    assert not fs[1]._set_result("late")
+    assert fs[1].cancelled
+
+
+class _DelayNth(InlineBackend):
+    """Delays the Nth (1-based) invoke call — a deterministic straggler
+    for streaming tests."""
+
+    def __init__(self, system, *, n_workers=2, nth=2, delay_s=0.6):
+        super().__init__(system, n_workers=n_workers)
+        self.nth, self.delay_s = nth, delay_s
+        self._calls = 0
+        self._calls_lock = threading.Lock()
+
+    def invoke(self, payload, worker_id):
+        with self._calls_lock:
+            self._calls += 1
+            me = self._calls
+        if me == self.nth:
+            time.sleep(self.delay_s)
+        return super().invoke(payload, worker_id)
+
+
+def test_run_async_streams_results_before_slowest_completes():
+    """submit()/wait(ANY): the early-finishing action's forecasts are in
+    the PredictionStore while the straggler is still executing — the
+    anti-phase-barrier property the futures surface exists for."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=2)
+    ex = ServerlessExecutor(c, backend=_DelayNth(c, nth=2, delay_s=0.8),
+                            aggregation=2, speculative=False)
+    c._serverless_ex = ex
+    assert all(r.ok for r in ex.run(c.scheduler.poll(NOW)))   # train+score
+    # 2h stall: two catch-up score bins -> two invocations (aggregation=2)
+    jobs = c.scheduler.poll(NOW + 2 * HOUR)
+    assert len(jobs) == 4
+    ex.backend.nth = ex.backend._calls + 2     # straggle the SECOND one
+    fs = ex.run_async(jobs)
+    assert len(fs) == 2
+    done, pending = wait(fs, return_when=ANY_COMPLETED, timeout=30.0)
+    assert len(done) == 1 and len(pending) == 1
+    assert not pending[0].done
+    # the completed future's bin is already persisted and queryable...
+    done_stamps = {r.scheduled_at for r in done[0].payload.jobs}
+    hist = {f.created_at for f in c.predictions.history("s-Z_PRO_0_0")}
+    assert done_stamps <= hist
+    # ...while the straggler's bin is not there yet
+    pending_stamps = {r.scheduled_at for r in pending[0].payload.jobs}
+    assert not (pending_stamps & hist)
+    done, pending = wait(fs, timeout=30.0)
+    assert not pending and all(f.success for f in done)
+    assert len(c.predictions.history("s-Z_PRO_0_0")) == 3
+    assert all(all(o.ok for o in f.result().outcomes) for f in done)
+
+
+def test_run_async_rejects_mixed_phases():
+    c = build_steady_castor("lr", LinearForecaster, {}, n=2)
+    ex = ServerlessExecutor(c, n_workers=1, speculative=False)
+    c._serverless_ex = ex
+    jobs = c.scheduler.poll(NOW)            # train + score due together
+    with pytest.raises(ValueError, match="single-phase"):
+        ex.run_async(jobs)
+    assert all(r.ok for r in ex.run(jobs))  # jobs still runnable
+
+
+def test_wait_timeout_cancellation_stops_retries_and_requeues():
+    """A cancelled in-flight invocation is not retried; its jobs are
+    marked failed so the scheduler re-fires the occurrences."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=2)
+    ex = ServerlessExecutor(c, backend=_DelayNth(c, nth=1, delay_s=0.8),
+                            speculative=False, max_retries=5)
+    c._serverless_ex = ex
+    assert all(r.ok for r in ex.run(c.scheduler.poll(NOW)))
+    jobs = c.scheduler.poll(NOW + HOUR)
+    ex.backend.nth = ex.backend._calls + 1     # delay the NEXT invocation
+    fs = ex.run_async(jobs)
+    with pytest.raises(FuturesTimeoutError):
+        wait(fs, timeout=0.1)
+    assert all(f.cancelled for f in fs)
+    deadline = time.time() + 10.0
+    while time.time() < deadline:           # drive thread finishes the
+        refire = c.scheduler.poll(NOW + HOUR + 1.0)   # in-flight action,
+        if refire:                          # then observes the cancel
+            break
+        time.sleep(0.05)
+    assert sorted({j.scheduled_at for j in refire}) == [NOW + HOUR]
+    assert ex.stats()["retries"] == 0
+    # the occurrences converge on the re-fire (idempotent against any
+    # late effects of the cancelled copy)
+    assert all(r.ok for r in ex.run(refire))
+    assert len(c.predictions.history("s-Z_PRO_0_0")) == 2
+
+
+# ------------------------------------------------- autoscaler
+def test_autoscaler_scales_out_and_reaps_deterministically():
+    """Pure decision logic against injected clock + telemetry: scale out
+    while backlogged and saturated (bounded by max_workers), reap idle
+    containers past the TTL (bounded by min_workers), never reuse ids."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=2)
+    be = InlineBackend(c, n_workers=2)
+    pol = AutoscalePolicy(min_workers=2, max_workers=4,
+                          target_queue_p95_s=0.5, idle_ttl_s=10.0)
+    a = Autoscaler(be, pol, InvocationMonitor())
+    t = 100.0
+    a.observe(backlog=3, busy={"w0": 1, "w1": 1}, now=t)      # saturated
+    assert be.worker_ids() == ["w0", "w1", "w2"]
+    a.observe(backlog=3, busy={w: 1 for w in be.worker_ids()}, now=t + 1)
+    assert be.worker_ids() == ["w0", "w1", "w2", "w3"]
+    a.observe(backlog=9, busy={w: 1 for w in be.worker_ids()}, now=t + 2)
+    assert len(be.worker_ids()) == 4                  # capped at max
+    a.observe(backlog=5, busy={"w0": 1}, now=t + 3)   # idle capacity:
+    assert len(be.worker_ids()) == 4                  # no scale-out
+    # idle reaping: w0 busy + recently used, the rest idle past TTL
+    a.note_dispatch("w0", now=t + 3)
+    reaped = a.reap_idle(busy={"w0": 1}, now=t + 50)
+    assert len(be.worker_ids()) == pol.min_workers
+    assert "w0" in be.worker_ids() and set(reaped) & {"w2", "w3"}
+    s = a.summary()
+    assert s["scale_outs"] == 2 and s["reaps"] == 2
+    assert s["peak_workers"] == 4 and s["workers"] == 2
+    assert [e["action"] for e in s["events"]] \
+        == ["scale_out", "scale_out", "reap", "reap"]
+    assert be.add_worker() == "w4"                    # ids never reused
+
+
+def test_autoscaler_queue_p95_signal():
+    """Scale-out also triggers on recent queue p95 above target even when
+    not every worker is busy at the instant of observation."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=2)
+    be = InlineBackend(c, n_workers=1)
+    mon = InvocationMonitor()
+    for i in range(10):     # synthetic slow-queue telemetry
+        p = InvocationPayload(invocation_id=f"inv-{i}", jobs=(),
+                              created_at=0.0)
+        r = InvocationResult(invocation_id=p.invocation_id, worker_id="w0",
+                             cold_start=False, started_at=2.0,
+                             finished_at=2.1, outcomes=())
+        mon.record(payload=p, result=r, worker_id="w0")
+    assert mon.recent_queue_p95() == pytest.approx(2.0)
+    a = Autoscaler(be, AutoscalePolicy(min_workers=1, max_workers=2,
+                                       target_queue_p95_s=0.5), mon)
+    a.observe(backlog=1, busy={}, now=50.0)
+    assert len(be.worker_ids()) == 2
+    assert a.summary()["events"][0]["reason"] == "queue_p95"
+
+
+class _SlowBackend(InlineBackend):
+    """Uniform per-invocation stall so a catch-up backlog saturates a
+    small pool long enough for the autoscaler to react."""
+
+    def invoke(self, payload, worker_id):
+        time.sleep(0.05)
+        return super().invoke(payload, worker_id)
+
+
+def test_elastic_executor_scales_under_load_and_reaps_idle():
+    """End-to-end: a backlogged catch-up cycle on a min-sized pool scales
+    out (work-stealing dispatch drains the backlog through the new
+    containers), completes every job exactly once, and the pool reaps
+    back to min after the work drains."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=4)
+    cref = build_steady_castor("lr", LinearForecaster, {}, n=4)
+    exref = ServerlessExecutor(cref, n_workers=1, speculative=False)
+    cref._serverless_ex = exref
+    be = _SlowBackend(c, n_workers=1)
+    ex = ServerlessExecutor(
+        c, backend=be, aggregation=4, speculative=False,
+        autoscale=AutoscalePolicy(min_workers=1, max_workers=3,
+                                  target_queue_p95_s=0.01, idle_ttl_s=0.0))
+    c._serverless_ex = ex
+    assert all(r.ok for r in ex.run(c.scheduler.poll(NOW)))
+    assert all(r.ok for r in exref.run(cref.scheduler.poll(NOW)))
+    # 6h stall: 6 catch-up bins of 4 jobs; aggregation=4 -> 6 invocations
+    res = ex.run(c.scheduler.poll(NOW + 6 * HOUR))
+    assert len(res) == 24 and all(r.ok for r in res), \
+        [r.error for r in res if not r.ok]
+    assert all(r.ok for r in exref.run(cref.scheduler.poll(NOW + 6 * HOUR)))
+    s = ex.stats()
+    assert s["autoscale"]["scale_outs"] >= 1
+    assert s["autoscale"]["peak_workers"] >= 2
+    # ttl=0: run() reaps every idle container back down to min at the end
+    assert s["autoscale"]["reaps"] >= 1 and s["workers"] == 1
+    # elasticity never compromises effects: bitwise equal to the
+    # fixed-single-worker reference
+    assert_stores_bitwise_equal(cref, c, context="elastic")
