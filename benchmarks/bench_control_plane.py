@@ -1,0 +1,131 @@
+"""Control-plane poll latency: O(due), flat in fleet size (PR 7).
+
+Two fleets — 2k and 200k deployments — with the SAME number of due
+deployments per steady-state poll (the rest idle on a far-future
+schedule). Pre-refactor, ``ModelScheduler.poll`` scanned every
+deployment every poll, so the 200k poll cost 100x the 2k poll; the
+calendar queue pops only due wake-up entries, so both polls do the same
+work. Gate: steady poll at N=200k within ``GATE`` x the N=2k poll.
+
+Pure-Python control plane (no JAX, no subprocess): min-of-reps
+``scheduler.poll`` wall time, the one-time O(fleet) catch-up drain of
+each deployment's first firing excluded (and reported separately).
+Results persist to ``BENCH_control_plane.json`` so the perf trajectory
+survives across PRs; ``benchmarks/run.py`` runs it and
+``make_tables.py`` renders it. Smoke mode (``--smoke`` or
+REPRO_BENCH_SMOKE=1): small fleets, no gate — CI runs this on every PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+from .common import Row
+
+N_SMALL, N_LARGE, DUE = 2_000, 200_000, 512
+N_SMALL_SMOKE, N_LARGE_SMOKE, DUE_SMOKE = 200, 5_000, 64
+GATE = 2.0
+OUT = Path("BENCH_control_plane.json")
+
+HOUR = 3600.0
+IDLE_EVERY = 1e12              # idle deployments never come due again
+
+
+def _build(n_total: int, n_due: int):
+    """A fleet of ``n_total`` deployments, ``n_due`` of them on an hourly
+    score schedule and the rest parked far in the future, polled once to
+    drain every deployment's one-shot first firing."""
+    from repro.core.deployment import DeploymentStore, ModelDeployment
+    from repro.core.registry import ModelInterface, ModelRegistry
+    from repro.core.scheduler import ModelScheduler, Schedule
+
+    class _Noop(ModelInterface):
+        def load(self):
+            pass
+
+        def transform(self):
+            pass
+
+        def train(self):
+            return {}
+
+        def score(self, model_object):
+            return [], []
+
+    deps = DeploymentStore()
+    reg = ModelRegistry()
+    reg.register("cp-bench", "1.0", _Noop)
+    sched = ModelScheduler(deps, reg)
+    t0 = time.perf_counter()
+    for i in range(n_total):
+        every = HOUR if i < n_due else IDLE_EVERY
+        deps.register(ModelDeployment(
+            name=f"cp-{i:06d}", package="cp-bench", signal="S",
+            entity=f"e{i}", score=Schedule(0.0, every)))
+    t_register = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jobs = sched.poll(HOUR)            # one-time O(fleet) catch-up drain
+    t_drain = time.perf_counter() - t0
+    assert len(jobs) == n_total, (len(jobs), n_total)
+    return sched, t_register, t_drain
+
+
+def _measure(n_total: int, n_due: int, reps: int = 7) -> dict:
+    sched, t_register, t_drain = _build(n_total, n_due)
+    times = []
+    for k in range(2, 2 + reps):
+        t0 = time.perf_counter()
+        jobs = sched.poll(k * HOUR)
+        times.append(time.perf_counter() - t0)
+        assert len(jobs) == n_due, (len(jobs), n_due)
+        assert all(j.scheduled_at == k * HOUR for j in jobs)
+    st = sched.stats()
+    # steady state: one boundary entry per live key, heap flat in polls
+    assert st["heap_entries"] <= 2 * n_total
+    return {"n": n_total, "due": n_due, "reps": reps,
+            "steady_poll_s": min(times),
+            "register_s": t_register, "drain_poll_s": t_drain,
+            "heap_entries": st["heap_entries"]}
+
+
+def run(smoke: bool | None = None) -> list[Row]:
+    if smoke is None:
+        smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n_small, n_large, due = ((N_SMALL_SMOKE, N_LARGE_SMOKE, DUE_SMOKE)
+                             if smoke else (N_SMALL, N_LARGE, DUE))
+    small = _measure(n_small, due)
+    large = _measure(n_large, due)
+    ratio = large["steady_poll_s"] / small["steady_poll_s"]
+    if not smoke and ratio > GATE:
+        # noisy box: one fresh re-measure before failing — a real
+        # O(fleet) regression (the ratio would sit near 100x) fails both
+        small2, large2 = _measure(n_small, due), _measure(n_large, due)
+        ratio2 = large2["steady_poll_s"] / small2["steady_poll_s"]
+        if ratio2 < ratio:
+            small, large, ratio = small2, large2, ratio2
+    r = {"small": small, "large": large, "fleet_ratio": n_large / n_small,
+         "poll_ratio": ratio, "smoke": smoke, "gate": None if smoke else GATE}
+    OUT.write_text(json.dumps(r, indent=1))
+    if not smoke:
+        assert ratio <= GATE, \
+            f"steady poll at N={n_large} is {ratio:.2f}x the N={n_small} " \
+            f"poll with identical due={due} (gate {GATE}x: poll must " \
+            "cost O(due), not O(fleet))"
+    tag = "_SMOKE" if smoke else ""
+    return [
+        ("control_plane_poll_small", small["steady_poll_s"] * 1e6,
+         f"N={n_small}_due={due}{tag}"),
+        ("control_plane_poll_large", large["steady_poll_s"] * 1e6,
+         f"N={n_large}_due={due}_ratio_vs_small={ratio:.2f}x{tag}"),
+        ("control_plane_drain", large["drain_poll_s"] * 1e6,
+         f"N={n_large}_one_time_first_firing_drain{tag}"),
+    ]
+
+
+if __name__ == "__main__":
+    rows = run(smoke="--smoke" in sys.argv)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

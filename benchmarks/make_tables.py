@@ -37,6 +37,33 @@ def steady_state_table() -> str:
     ])
 
 
+CONTROL_ART = Path("BENCH_control_plane.json")
+
+
+def control_plane_table() -> str:
+    """Calendar-queue poll latency vs fleet size from the artifact
+    written by benchmarks.bench_control_plane."""
+    if not CONTROL_ART.exists():
+        return "_no BENCH_control_plane.json — run " \
+               "`python -m benchmarks.bench_control_plane` first_"
+    r = json.loads(CONTROL_ART.read_text())
+    s, l = r["small"], r["large"]
+    tag = " (SMOKE: small fleets, ungated)" if r.get("smoke") else ""
+    return "\n".join([
+        f"Control-plane steady polls{tag}: {r['fleet_ratio']:.0f}x the "
+        f"fleet costs **{r['poll_ratio']:.2f}x** the poll (identical "
+        f"due={s['due']}; a fleet scanner would sit near "
+        f"{r['fleet_ratio']:.0f}x).",
+        "",
+        "| fleet | steady poll (ms) | one-time drain (ms) | heap entries |",
+        "|---|---|---|---|",
+        f"| {s['n']:,} | {s['steady_poll_s'] * 1e3:.2f} "
+        f"| {s['drain_poll_s'] * 1e3:.1f} | {s['heap_entries']:,} |",
+        f"| {l['n']:,} | {l['steady_poll_s'] * 1e3:.2f} "
+        f"| {l['drain_poll_s'] * 1e3:.1f} | {l['heap_entries']:,} |",
+    ])
+
+
 INVOKE_ART = Path("BENCH_invocations.json")
 
 
@@ -196,3 +223,5 @@ if __name__ == "__main__":
     print(invocations_table())
     print("\n### Steady-state poll hot path\n")
     print(steady_state_table())
+    print("\n### Control-plane poll scaling\n")
+    print(control_plane_table())

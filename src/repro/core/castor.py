@@ -56,6 +56,13 @@ class Castor:
     def deploy_for_all(self, **kw) -> List[ModelDeployment]:
         return deploy_for_all(self.graph, self.deployments, **kw)
 
+    def undeploy(self, name: str) -> None:
+        """Remove a deployment. The store's listener protocol clears the
+        scheduler's calendar entry, watermark and queued retries for the
+        name, so a later same-name ``deploy`` fires from scratch (and a
+        redeploy with an edited ``Schedule`` re-keys the calendar)."""
+        self.deployments.remove(name)
+
     # ---------------- (7)-(10) execution ----------------
     def tick(self, now: float, *, executor: str = "fleet",
              max_parallel: int = 16) -> List[JobResult]:
@@ -151,8 +158,12 @@ class Castor:
                "store_reads": st["reads"],
                "store_read_many": st["read_many"],
                "deployments": len(self.deployments),
+               "deployment_revision": self.deployments.revision,
                "model_versions": self.versions.count(),
-               "forecasts": self.predictions.count()}
+               "forecasts": self.predictions.count(),
+               # control-plane telemetry: calendar-queue depth + interned
+               # bin count (core/scheduler.py)
+               "scheduler": self.scheduler.stats()}
         sv = getattr(self, "_serverless_ex", None)
         if sv is not None:
             # per-invocation cold/warm-start + queue/execution latency

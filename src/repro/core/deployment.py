@@ -37,20 +37,64 @@ class ModelDeployment:
 
 
 class DeploymentStore:
+    """Indexed deployment registry: by name, by context ``(signal,
+    entity)`` and by package, with a monotonically increasing
+    ``revision`` and a listener protocol (``on_register(dep)`` /
+    ``on_remove(name)``) so downstream caches — the scheduler's calendar
+    queue above all — invalidate INCREMENTALLY on changes instead of
+    re-scanning or re-sorting the fleet each poll. Context and package
+    lookups are index hits proportional to their result size, never a
+    fleet scan."""
+
     def __init__(self):
         self._deps: Dict[str, ModelDeployment] = {}
         self._sorted: Optional[List[ModelDeployment]] = None
+        self._by_context: Dict[tuple, Dict[str, ModelDeployment]] = {}
+        self._by_package: Dict[str, Dict[str, ModelDeployment]] = {}
+        self._revision = 0
+        self._listeners: List = []
+
+    @property
+    def revision(self) -> int:
+        """Bumped on every register/remove: consumers holding derived
+        state (sorted views, routing tables) compare-and-refresh against
+        this instead of diffing the fleet."""
+        return self._revision
+
+    def subscribe(self, listener) -> None:
+        """Register a mutation listener: ``listener.on_register(dep)``
+        after each registration, ``listener.on_remove(name)`` after each
+        removal. The scheduler subscribes itself to keep its calendar
+        queue and per-deployment state exactly in sync with the store."""
+        self._listeners.append(listener)
 
     def register(self, dep: ModelDeployment) -> ModelDeployment:
         if dep.name in self._deps:
             raise ValueError(f"deployment {dep.name} already registered")
         self._deps[dep.name] = dep
+        self._by_context.setdefault(dep.context_key, {})[dep.name] = dep
+        self._by_package.setdefault(dep.package, {})[dep.name] = dep
         self._sorted = None
+        self._revision += 1
+        for sub in self._listeners:
+            sub.on_register(dep)
         return dep
 
     def remove(self, name: str):
-        self._deps.pop(name, None)
+        dep = self._deps.pop(name, None)
+        if dep is None:
+            return
+        for index, key in ((self._by_context, dep.context_key),
+                           (self._by_package, dep.package)):
+            bucket = index.get(key)
+            if bucket is not None:
+                bucket.pop(name, None)
+                if not bucket:
+                    del index[key]
         self._sorted = None
+        self._revision += 1
+        for sub in self._listeners:
+            sub.on_remove(name)
 
     def get(self, name: str) -> ModelDeployment:
         return self._deps[name]
@@ -59,18 +103,25 @@ class DeploymentStore:
         return name in self._deps
 
     def all(self) -> List[ModelDeployment]:
-        # the scheduler walks every deployment every poll: cache the sort
-        # (invalidated on register/remove) instead of re-sorting a
-        # thousands-strong fleet each cycle
+        # bulk consumers (benchmark sweeps, deploy_for_all audits) get a
+        # cached sort, invalidated by revision bumps — the scheduler no
+        # longer calls this per poll at all
         if self._sorted is None:
             self._sorted = sorted(self._deps.values(), key=lambda d: d.name)
         return list(self._sorted)
 
     def for_context(self, signal: str, entity: str) -> List[ModelDeployment]:
-        """All models deployed against one context, rank-sorted (Fig. 5)."""
-        out = [d for d in self._deps.values()
-               if d.signal == signal and d.entity == entity]
-        return sorted(out, key=lambda d: (d.rank, d.name))
+        """All models deployed against one context, rank-sorted (Fig. 5).
+        Index hit: O(models on that context), not O(fleet)."""
+        out = self._by_context.get((signal, entity), {})
+        return sorted(out.values(), key=lambda d: (d.rank, d.name))
+
+    def for_package(self, package: str) -> List[ModelDeployment]:
+        """All deployments of one implementation package, name-sorted
+        (index hit — e.g. 'which fleets does retiring this package
+        strand?')."""
+        out = self._by_package.get(package, {})
+        return sorted(out.values(), key=lambda d: d.name)
 
     def __len__(self):
         return len(self._deps)

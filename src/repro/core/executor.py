@@ -387,7 +387,8 @@ class FleetExecutor(_ExecBase):
             per = dt / max(len(bin_jobs_), 1)
             out.extend(JobResult(j, True, per) for j in bin_jobs_)
             rc1 = rollout_cache_stats()
-            stats = {"bin": str(key), "jobs": len(bin_jobs_), "seconds": dt,
+            stats = {"bin": str(key), "bin_id": bin_jobs_[0].bin_id,
+                     "jobs": len(bin_jobs_), "seconds": dt,
                      "read_many_calls":
                          getattr(store, "read_many_count", 0) - rm0,
                      "single_reads": getattr(store, "read_count", 0) - r0,

@@ -21,8 +21,9 @@ Responsibilities, in the order they happen each phase:
   numerics depend on the batch composition — splitting would break the
   bitwise inline == fleet contract.
 * **Warm-container affinity + late-bound dispatch.** Each logical bin
-  (``payload.affinity_key``: deployment set + params, across polls and
-  across train/score) routes stickily to the worker that last ran it, so
+  (``payload.affinity_key``: an interned int for deployment set + params,
+  stable across polls and across train/score) routes stickily to the
+  worker that last ran it, so
   that worker's ``FleetRuntime`` — device rings, compile caches,
   train->score param handoff — stays warm. Affinity follows success: a
   bin that completes on a different worker (retry, speculation) re-pins
@@ -115,7 +116,7 @@ class ServerlessInvoker:
         self.autoscaler = (Autoscaler(backend, autoscale, self.monitor)
                            if autoscale is not None else None)
         self._rng = random.Random(seed)
-        self._affinity: Dict[tuple, str] = {}
+        self._affinity: Dict[int, str] = {}     # interned affinity_key -> worker
         self._rr = 0
         self._seq = 0
 

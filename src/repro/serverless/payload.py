@@ -24,6 +24,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..core.interning import InternTable
 from ..core.scheduler import Job
 
 # ---------------------------------------------------------------- arrays
@@ -191,16 +192,23 @@ class InvocationResult:
             forecasts=tuple(ForecastBlob(**f) for f in d["forecasts"]))
 
 
-def affinity_key(bin_jobs: List[Job]) -> tuple:
-    """Sticky-routing key for one bin: which warm container its work
-    should land on. Excludes ``scheduled_at`` and ``task`` (unlike
-    ``Job.bin_key``) so catch-up occurrences, successive polls, and the
-    train/score halves of ONE logical bin all hit the same worker — the
-    worker's warm ``FleetRuntime`` state and its train->score device-param
-    handoff are keyed by exactly (deployment set, params), which is what
-    the member-name digest pins."""
-    import zlib
+#: process-wide intern table for affinity keys: the invoker's routing
+#: dict is keyed by these dense ints, so steady-state routing of a bin
+#: it has seen before is one tuple hash (here) + one int lookup — no
+#: per-poll digesting of member-name strings
+AFFINITY_KEYS = InternTable()
+
+
+def affinity_key(bin_jobs: List[Job]) -> int:
+    """Sticky-routing key for one bin — an INTERNED dense int — deciding
+    which warm container its work should land on. The interned value
+    excludes ``scheduled_at`` and ``task`` (unlike ``Job.bin_key``) so
+    catch-up occurrences, successive polls, and the train/score halves of
+    ONE logical bin all map to the same int — the worker's warm
+    ``FleetRuntime`` state and its train->score device-param handoff are
+    keyed by exactly (deployment set, params), which is what the sorted
+    member tuple pins. Ids never cross processes; payloads ship names."""
     j0 = bin_jobs[0]
-    names = "\x00".join(sorted(j.deployment_name for j in bin_jobs))
-    return (j0.package, j0.version, j0.user_params_key,
-            zlib.crc32(names.encode()))
+    return AFFINITY_KEYS.intern(
+        (j0.package, j0.version, j0.user_params_key,
+         tuple(sorted(j.deployment_name for j in bin_jobs))))

@@ -1,0 +1,653 @@
+"""Control-plane tests: calendar-queue scheduler, drift-proof schedule
+arithmetic, indexed deployment store, interned semantic graph, interned
+bin grouping (PR 7).
+
+The equivalence anchor throughout is the PRE-refactor behavior: the
+old full-fleet scanner is reimplemented here as a reference model and
+the calendar queue is driven against it on randomized fleets — same
+jobs, same order, same watermark/retry semantics.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from _hypothesis_compat import given, settings, st
+from repro.core.deployment import DeploymentStore, ModelDeployment
+from repro.core.interning import InternTable
+from repro.core.registry import ModelInterface, ModelRegistry
+from repro.core.scheduler import (Job, ModelScheduler, Schedule, bin_jobs,
+                                  bin_key_of)
+from repro.core.semantics import Entity, SemanticGraph, Signal
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+
+
+class _Dummy(ModelInterface):
+    def load(self):
+        pass
+
+    def transform(self):
+        pass
+
+    def train(self):
+        return {}
+
+    def score(self, model_object):
+        return [], []
+
+
+def make_registry(packages=("pkg",)):
+    reg = ModelRegistry()
+    for p in packages:
+        reg.register(p, "1.0", _Dummy)
+    return reg
+
+
+def make_system(packages=("pkg",), max_catchup=168):
+    deps = DeploymentStore()
+    reg = make_registry(packages)
+    sched = ModelScheduler(deps, reg, max_catchup=max_catchup)
+    return deps, reg, sched
+
+
+def dep(name, *, package="pkg", train=None, score=None, params=None,
+        signal="S", entity="E", version=None, rank=0):
+    return ModelDeployment(
+        name=name, package=package, version=version, signal=signal,
+        entity=entity, train=train, score=score,
+        user_params=dict(params or {}), rank=rank)
+
+
+# ===================================================================
+# Schedule arithmetic: drift-proof occurrence indexing
+# ===================================================================
+
+# (start, every, k) triples where the OLD ``int((t - start) // every)``
+# arithmetic miscounted: stepping from boundary k to boundary k+1
+# reported 0 or 2 occurrences due instead of exactly 1
+OLD_DRIFT_CASES = [
+    (16527635.528529095, 5744.376150152334, 40973523),      # old: 0
+    (912755577.2777218, 19.03835011408123, 970742837),      # old: 2
+    (33585575.30546436, 569.987533589485, 857404276),       # old: 2
+    (28319671.145462967, 3.100268573409856e-05, 8284309),   # old: 2
+    (647189511.5742501, 24.24495251003103, 670624414),      # old: 2
+]
+
+
+@pytest.mark.parametrize("start,every,k", OLD_DRIFT_CASES)
+def test_drift_regression_one_step_fires_once(start, every, k):
+    s = Schedule(start, every)
+    b0 = start + k * every
+    b1 = start + (k + 1) * every
+    assert s.occurrences_due(b0, b1) == 1
+    assert s.boundaries_due(b0, b1) == [b1]
+    assert s.next_boundary_after(b0) == b1
+    # and the boundary instant itself is not double-counted
+    assert s.occurrences_due(b1, b1) == 0
+
+
+def _lattice(start, exp_every, k):
+    """Build (Schedule, boundary_k, boundary_k+1); None if ``every`` is
+    below the float lattice's resolution at this magnitude (degenerate:
+    start + k*every stops being strictly increasing)."""
+    every = float(10.0 ** exp_every)
+    s = Schedule(start, every)
+    b0 = start + k * every
+    b1 = start + (k + 1) * every
+    if not (start < b0 < b1):
+        return None
+    return s, b0, b1
+
+
+@settings(max_examples=200)
+@given(start=st.floats(min_value=1e-3, max_value=1e9),
+       exp_every=st.floats(min_value=-6.0, max_value=6.0),
+       k=st.integers(min_value=1, max_value=10**9))
+def test_drift_property_single_step(start, exp_every, k):
+    lat = _lattice(start, exp_every, k)
+    if lat is None:
+        return
+    s, b0, b1 = lat
+    # exactly one firing per consecutive boundary pair, stamped at b1
+    assert s.occurrences_due(b0, b1) == 1
+    assert s.boundaries_due(b0, b1) == [b1]
+    # a boundary never re-fires against itself
+    assert s.occurrences_due(b1, b1) == 0
+    assert s.boundaries_due(b1, b1) == []
+    # the armed wake-up agrees with the firing lattice
+    assert s.next_boundary_after(b0) == b1
+
+
+@settings(max_examples=200)
+@given(start=st.floats(min_value=1e-3, max_value=1e9),
+       exp_every=st.floats(min_value=-6.0, max_value=6.0),
+       k=st.integers(min_value=1, max_value=10**9),
+       span=st.integers(min_value=1, max_value=50),
+       frac=st.floats(min_value=0.0, max_value=0.999))
+def test_drift_property_window_consistency(start, exp_every, k, span, frac):
+    lat = _lattice(start, exp_every, k)
+    if lat is None:
+        return
+    s, b0, _ = lat
+    every = s.every
+    now = start + (k + span) * every + frac * every
+    n = s.occurrences_due(b0, now)
+    bs = s.boundaries_due(b0, now)
+    # count and stamps come from the same arithmetic
+    assert len(bs) == n
+    # every stamp lies in (last_run, now], strictly increasing
+    assert all(b0 < b <= now for b in bs)
+    assert all(x < y for x, y in zip(bs, bs[1:]))
+    # additivity: splitting the window at any returned boundary conserves
+    # the total count (no occurrence lost or double-counted at the seam)
+    if bs:
+        mid = bs[len(bs) // 2]
+        assert s.occurrences_due(b0, mid) \
+            + s.occurrences_due(mid, now) == n
+        # the last stamp's successor is strictly beyond now
+        assert s.next_boundary_after(bs[-1]) > now
+
+
+@settings(max_examples=100)
+@given(start=st.floats(min_value=1e-3, max_value=1e9),
+       exp_every=st.floats(min_value=-6.0, max_value=6.0),
+       # small k: the no-limit branch below MATERIALIZES k+1 boundaries
+       k=st.integers(min_value=1, max_value=500))
+def test_drift_property_before_start_and_limit(start, exp_every, k):
+    lat = _lattice(start, exp_every, k)
+    if lat is None:
+        return
+    s, b0, _ = lat
+    assert s.occurrences_due(None, start - 1.0) == 0
+    assert s.occurrences_due(None, b0) == 1          # fire once, catch up
+    assert s.next_boundary_after(start - 1.0) == s.start
+    # a pre-start watermark owes every boundary up to now
+    bs_all = s.boundaries_due(s.start - 1.0, b0)
+    assert len(bs_all) == k + 1
+    # limit keeps the MOST RECENT stamps
+    bs_lim = s.boundaries_due(s.start - 1.0, b0, limit=3)
+    assert bs_lim == bs_all[-3:]
+
+
+# ===================================================================
+# Calendar queue: remove / re-register / schedule edits
+# ===================================================================
+
+def test_remove_then_reregister_fires_from_scratch():
+    """The satellite bugfix: ``remove`` must clear the scheduler's
+    watermark and queued retries, so a same-name re-registration behaves
+    exactly like a brand-new deployment."""
+    deps, _, sched = make_system()
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    jobs = sched.poll(10 * HOUR)
+    assert len(jobs) == 1                       # first firing collapses
+    assert jobs[0].scheduled_at == 10 * HOUR
+    sched.mark_failed(jobs[0])                  # leave a queued retry too
+
+    deps.remove("m")
+    assert sched.poll(11 * HOUR) == []          # nothing lingers
+    assert ("m", "score") not in sched._last
+    assert ("m", "score") not in sched._failed
+
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    jobs = sched.poll(12 * HOUR)
+    # from scratch: ONE collapsed first firing at the poll's boundary —
+    # not a catch-up from the stale watermark, not the old retry stamp
+    assert [j.scheduled_at for j in jobs] == [12 * HOUR]
+    jobs = sched.poll(13 * HOUR)
+    assert [j.scheduled_at for j in jobs] == [13 * HOUR]
+
+
+def test_schedule_edit_rekeys_calendar_entry():
+    """Redeploying with a different Schedule must re-key the wake-up:
+    firings follow the NEW lattice immediately, with no ghost wake-ups or
+    stamps from the old one."""
+    deps, _, sched = make_system()
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    assert len(sched.poll(HOUR)) == 1
+
+    deps.remove("m")
+    deps.register(dep("m", score=Schedule(0.0, DAY)))   # edited: hourly -> daily
+    jobs = sched.poll(2 * HOUR)     # old lattice had a boundary here...
+    # ...and the fresh first firing stamps at the NEW lattice's last
+    # boundary <= now (0.0), not at the old hourly boundary
+    assert [j.scheduled_at for j in jobs] == [0.0]
+    assert sched.poll(5 * HOUR) == []   # new lattice: nothing until DAY
+    jobs = sched.poll(DAY)
+    assert [j.scheduled_at for j in jobs] == [DAY]
+
+
+def test_remove_clears_both_tasks_and_train_schedule_edits():
+    deps, _, sched = make_system()
+    deps.register(dep("m", train=Schedule(0.0, DAY), score=Schedule(0.0, HOUR)))
+    jobs = sched.poll(DAY)
+    assert [(j.task, j.scheduled_at) for j in jobs] == \
+        [("train", DAY), ("score", DAY)]
+    deps.remove("m")
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))  # train schedule dropped
+    jobs = sched.poll(2 * DAY)
+    assert [(j.task, j.scheduled_at) for j in jobs] == [("score", 2 * DAY)]
+
+
+def test_mark_failed_after_remove_is_dropped():
+    """A failure surfacing after its deployment was removed (job was in
+    flight) must not queue a retry against a future re-registration."""
+    deps, _, sched = make_system()
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    (job,) = sched.poll(HOUR)
+    deps.remove("m")
+    sched.mark_failed(job)                      # in-flight failure lands late
+    assert sched._failed == {}
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    jobs = sched.poll(2 * HOUR)
+    assert [j.scheduled_at for j in jobs] == [2 * HOUR]   # no replayed retry
+
+
+def test_retries_and_new_boundaries_share_catchup_cap():
+    """Queued failure stamps and newly missed boundaries share ONE
+    ``max_catchup`` budget per (deployment, task); the most recent
+    boundaries win (queued retries are the oldest, so they are dropped
+    first)."""
+    deps, _, sched = make_system(max_catchup=4)
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    (j0,) = sched.poll(HOUR)
+    sched.mark_failed(j0)                       # queued retry at 1h
+    # stall until 10h: retry(1h) + new(2..10h) = 10 candidates, cap 4
+    jobs = sched.poll(10 * HOUR)
+    assert [j.scheduled_at / HOUR for j in jobs] == [7, 8, 9, 10]
+    # the queued retry was dropped along with the older new boundaries
+    assert sched._failed == {}
+
+    # when the combined set fits, the retry fires at its ORIGINAL stamp
+    (j1,) = [j for j in sched.poll(11 * HOUR)]
+    sched.mark_failed(j1)
+    jobs = sched.poll(13 * HOUR)
+    assert [j.scheduled_at / HOUR for j in jobs] == [11, 12, 13]
+
+
+def test_spurious_wakeup_rearms_without_emitting():
+    """Duplicate retry entries whose stamps already cleared pop as
+    spurious wake-ups: no jobs, but the boundary entry re-arms so the
+    deployment keeps firing."""
+    deps, _, sched = make_system()
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    (j,) = sched.poll(HOUR)
+    sched.mark_failed(j)
+    sched.mark_failed(j)                        # duplicate retry entry
+    jobs = sched.poll(HOUR + 60.0)              # retry fires once
+    assert [x.scheduled_at for x in jobs] == [HOUR]
+    assert sched.poll(HOUR + 120.0) == []       # duplicate: spurious, silent
+    jobs = sched.poll(2 * HOUR)                 # and the boundary still armed
+    assert [x.scheduled_at for x in jobs] == [2 * HOUR]
+
+
+def test_poll_atomic_on_registry_failure_restores_heap():
+    """A poll that raises (unpublished package) must leave the calendar
+    queue able to re-fire everything on the next poll."""
+    deps, reg, sched = make_system()
+    deps.register(dep("a", score=Schedule(0.0, HOUR)))
+    deps.register(dep("z", package="ghost", score=Schedule(0.0, HOUR)))
+    with pytest.raises(KeyError):
+        sched.poll(HOUR)
+    reg.register("ghost", "1.0", _Dummy)        # publish, then retry the poll
+    jobs = sched.poll(HOUR)
+    assert sorted(j.deployment_name for j in jobs) == ["a", "z"]
+    assert all(j.scheduled_at == HOUR for j in jobs)
+
+
+def test_scheduler_seeds_from_prepopulated_store():
+    """A scheduler built over an already-populated store must arm
+    wake-ups for the existing fleet (the subscribe-then-seed path)."""
+    deps = DeploymentStore()
+    deps.register(dep("m", score=Schedule(0.0, HOUR)))
+    sched = ModelScheduler(deps, make_registry())
+    assert [j.scheduled_at for j in sched.poll(HOUR)] == [HOUR]
+
+
+def test_poll_cost_tracks_due_not_fleet():
+    """The point of the calendar queue: a steady-state poll where nothing
+    is due pops zero entries regardless of fleet size."""
+    deps, _, sched = make_system()
+    for i in range(500):
+        deps.register(dep(f"idle-{i:04d}", score=Schedule(0.0, 10_000 * DAY)))
+    deps.register(dep("hot", score=Schedule(0.0, HOUR)))
+    jobs = sched.poll(HOUR)                     # drains every start entry once
+    assert len(jobs) == 501
+    before = len(sched._heap)
+    for k in range(2, 6):
+        jobs = sched.poll(k * HOUR)
+        assert [j.deployment_name for j in jobs] == ["hot"]
+    # steady state: one boundary entry per live key, no growth
+    assert len(sched._heap) == before
+
+
+# ===================================================================
+# Calendar queue vs the old full-fleet scanner (reference model)
+# ===================================================================
+
+class _OldScanner:
+    """The pre-refactor scheduler, verbatim semantics: scan every
+    deployment each poll, plan, then commit after all lookups."""
+
+    def __init__(self, deployments, registry, max_catchup=168):
+        self.deployments = deployments
+        self.registry = registry
+        self.max_catchup = max_catchup
+        self._last = {}
+        self._failed = {}
+
+    def poll(self, now):
+        jobs, planned = [], []
+        for d in self.deployments.all():
+            for task in ("train", "score"):
+                sched = getattr(d, task)
+                if sched is None:
+                    continue
+                key = (d.name, task)
+                new = sched.boundaries_due(self._last.get(key), now,
+                                           self.max_catchup)
+                stamps = sorted(self._failed.get(key, ())) + new
+                if self.max_catchup:
+                    stamps = stamps[-self.max_catchup:]
+                if not stamps:
+                    continue
+                version = self.registry.resolve_version(d.package, d.version)
+                planned.append((d, task, key, stamps, bool(new), version))
+        for d, task, key, stamps, advance, version in planned:
+            self._failed.pop(key, None)
+            if advance:
+                self._last[key] = now
+            for ts in dict.fromkeys(stamps):
+                jobs.append(Job(
+                    deployment_name=d.name, package=d.package,
+                    version=version, task=task, scheduled_at=ts,
+                    signal=d.signal, entity=d.entity,
+                    user_params_key=repr(sorted(d.user_params.items()))))
+        jobs.sort(key=lambda j: (j.task != "train", j.scheduled_at,
+                                 j.deployment_name))
+        return jobs
+
+    def mark_failed(self, job):
+        self._failed.setdefault((job.deployment_name, job.task),
+                                set()).add(job.scheduled_at)
+
+
+def test_poll_order_determinism_vs_old_scanner():
+    """Drive the calendar queue and the old scanner over the same
+    randomized fleet, poll instants and failure pattern: identical job
+    sequences, poll after poll."""
+    rng = np.random.default_rng(7)
+    deps, reg, new = make_system(packages=("p0", "p1", "p2"), max_catchup=6)
+    old = _OldScanner(deps, reg, max_catchup=6)
+
+    fleet = []
+    for i in range(40):
+        d = dep(f"d{i:03d}",
+                package=f"p{rng.integers(3)}",
+                train=(Schedule(float(rng.integers(0, 48)) * HOUR,
+                                float(rng.integers(1, 7)) * DAY)
+                       if rng.random() < 0.6 else None),
+                score=(Schedule(float(rng.integers(0, 24)) * HOUR,
+                                float(rng.integers(1, 13)) * HOUR)
+                       if rng.random() < 0.9 else None),
+                params={"h": int(rng.integers(1, 4))})
+        fleet.append(deps.register(d))
+
+    now = 0.0
+    for step in range(60):
+        now += float(rng.integers(1, 30)) * (HOUR / 2)
+        a, b = new.poll(now), old.poll(now)
+        assert a == b, f"poll {step} diverged at now={now}"
+        # fail a random subset; both schedulers see the same failures
+        for j in a:
+            if rng.random() < 0.25:
+                new.mark_failed(j)
+                old.mark_failed(j)
+    # end state agrees too
+    assert new._last == old._last
+    assert {k: set(v) for k, v in new._failed.items()} == \
+        {k: set(v) for k, v in old._failed.items()}
+
+
+# ===================================================================
+# DeploymentStore: indexes, revision, listeners
+# ===================================================================
+
+def test_store_indexes_and_revision():
+    deps = DeploymentStore()
+    r0 = deps.revision
+    a = deps.register(dep("a", package="p1", signal="S", entity="E1", rank=1))
+    b = deps.register(dep("b", package="p1", signal="S", entity="E1", rank=0))
+    c = deps.register(dep("c", package="p2", signal="S", entity="E2"))
+    assert deps.revision == r0 + 3
+    # context index: rank-sorted (Fig. 5 ranking), index bucket only
+    assert deps.for_context("S", "E1") == [b, a]
+    assert deps.for_context("S", "E2") == [c]
+    assert deps.for_context("S", "nope") == []
+    # package index: name-sorted
+    assert deps.for_package("p1") == [a, b]
+    assert deps.for_package("p2") == [c]
+    assert deps.for_package("ghost") == []
+    assert deps.all() == [a, b, c]
+
+    deps.remove("b")
+    assert deps.revision == r0 + 4
+    assert deps.for_context("S", "E1") == [a]
+    assert deps.for_package("p1") == [a]
+    deps.remove("b")                            # idempotent, no revision bump
+    assert deps.revision == r0 + 4
+    deps.remove("a")
+    deps.remove("c")
+    # empty index buckets are deleted, not left as empty dicts
+    assert deps._by_context == {} and deps._by_package == {}
+
+
+def test_store_duplicate_name_raises():
+    deps = DeploymentStore()
+    deps.register(dep("a"))
+    with pytest.raises(ValueError):
+        deps.register(dep("a"))
+
+
+def test_store_listener_protocol():
+    events = []
+
+    class Listener:
+        def on_register(self, d):
+            events.append(("reg", d.name))
+
+        def on_remove(self, name):
+            events.append(("rm", name))
+
+    deps = DeploymentStore()
+    deps.subscribe(Listener())
+    deps.register(dep("a"))
+    deps.register(dep("b"))
+    deps.remove("a")
+    deps.remove("missing")                      # no event for a no-op remove
+    assert events == [("reg", "a"), ("reg", "b"), ("rm", "a")]
+
+
+# ===================================================================
+# SemanticGraph: interned indexes vs brute force
+# ===================================================================
+
+def _brute_find(g, kind=None, has_signal=None, under=None):
+    """The old scanner semantics: filter ALL entities predicate by
+    predicate, name-sorted result."""
+    names = set(g.entities)
+    if has_signal is not None:
+        names &= {e for (s, e) in g._ts if s == has_signal}
+    if kind is not None:
+        names &= {n for n, e in g.entities.items() if e.kind == kind}
+    if under is not None:
+        names &= {e.name for e in g.descendants(under)}
+    return [g.entities[n] for n in sorted(names)]
+
+
+def _random_graph(seed, n_entities=60, n_signals=4):
+    rng = np.random.default_rng(seed)
+    g = SemanticGraph()
+    sigs = [f"SIG{i}" for i in range(n_signals)]
+    for s in sigs:
+        g.add_signal(Signal(s))
+    kinds = ["SUBSTATION", "FEEDER", "PROSUMER"]
+    names = []
+    for i in range(n_entities):
+        name = f"E{i:03d}"
+        parent = (names[int(rng.integers(len(names)))]
+                  if names and rng.random() < 0.8 else None)
+        g.add_entity(Entity(name, kinds[int(rng.integers(3))]), parent)
+        names.append(name)
+        for s in sigs:
+            if rng.random() < 0.4:
+                g.link_timeseries(f"ts-{s}-{name}", s, name)
+    return g, sigs, kinds, names, rng
+
+
+def test_graph_find_entities_matches_brute_force():
+    g, sigs, kinds, names, rng = _random_graph(3)
+    combos = [(None, None, None)]
+    for _ in range(40):
+        combos.append((
+            kinds[int(rng.integers(3))] if rng.random() < 0.7 else None,
+            sigs[int(rng.integers(len(sigs)))] if rng.random() < 0.7 else None,
+            names[int(rng.integers(len(names)))] if rng.random() < 0.7 else None))
+    for kind, sig, under in combos:
+        got = g.find_entities(kind=kind, has_signal=sig, under=under)
+        want = _brute_find(g, kind=kind, has_signal=sig, under=under)
+        assert got == want, (kind, sig, under)
+
+
+def test_graph_contexts_for_signal_matches_brute_force():
+    g, sigs, _, _, _ = _random_graph(4)
+    for s in sigs:
+        got = g.contexts_for_signal(s)
+        want_names = sorted(e for (sg, e) in g._ts if sg == s)
+        assert [c.entity.name for c in got] == want_names
+        assert all(c.signal.name == s for c in got)
+        assert [g._ts[(s, c.entity.name)] for c in got] == \
+            [c.ts_id for c in got]
+
+
+def test_graph_descendants_memo_invalidation():
+    g = SemanticGraph()
+    for name, parent in [("root", None), ("a", "root"), ("b", "root"),
+                         ("a1", "a")]:
+        g.add_entity(Entity(name), parent)
+    # the scanner's traversal order: all children of a node (name-sorted)
+    # are appended before descending, deepest-last-child first
+    assert [e.name for e in g.descendants("root")] == ["a", "b", "a1"]
+    assert [e.name for e in g.descendants("a")] == ["a1"]
+    # memo is now warm; a new edge deep in the tree must invalidate the
+    # whole ancestor chain
+    g.add_entity(Entity("a1x"), "a1")
+    assert [e.name for e in g.descendants("a")] == ["a1", "a1x"]
+    assert [e.name for e in g.descendants("root")] == ["a", "b", "a1", "a1x"]
+    # re-parenting keeps the old edge (scanner quirk) AND invalidates
+    # through BOTH parents
+    g.add_entity(Entity("moved"), "b")
+    assert [e.name for e in g.descendants("b")] == ["moved"]
+    g.add_entity(Entity("moved"), "a")
+    g.add_entity(Entity("deep"), "moved")
+    assert "deep" in {e.name for e in g.descendants("a")}
+    assert "deep" in {e.name for e in g.descendants("b")}   # old edge kept
+
+
+def test_graph_kind_change_readd_updates_kind_index():
+    g = SemanticGraph()
+    g.add_entity(Entity("x", "FEEDER"))
+    assert [e.name for e in g.find_entities(kind="FEEDER")] == ["x"]
+    g.add_entity(Entity("x", "SUBSTATION"))     # re-add with a new kind
+    assert g.find_entities(kind="FEEDER") == []
+    assert [e.name for e in g.find_entities(kind="SUBSTATION")] == ["x"]
+
+
+def test_graph_id_handles():
+    g = SemanticGraph()
+    g.add_signal(Signal("S"))
+    g.add_entity(Entity("e0"))
+    g.add_entity(Entity("e1"))
+    assert g.entity_id("e0") != g.entity_id("e1")
+    assert g.entity_id("e0") == g.entity_id("e0")       # stable
+    with pytest.raises(KeyError):
+        g.entity_id("ghost")
+    with pytest.raises(KeyError):
+        g.signal_id("ghost")
+    assert isinstance(g.signal_id("S"), int)
+
+
+# ===================================================================
+# Interning + vectorized bin grouping
+# ===================================================================
+
+def test_intern_table_basics():
+    t = InternTable()
+    a = t.intern(("x", 1.0))
+    b = t.intern(("y", 2.0))
+    assert a != b
+    assert t.intern(("x", 1.0)) == a            # idempotent
+    assert t.value(a) == ("x", 1.0)
+    assert t.get(("y", 2.0)) == b
+    assert t.get(("never",)) is None            # get never inserts
+    assert len(t) == 2
+    assert ("x", 1.0) in t and ("z",) not in t
+
+
+def _mk_job(i, *, pkg="pkg", task="score", at=HOUR, pk=""):
+    return Job(deployment_name=f"d{i:04d}", package=pkg, version="1.0",
+               task=task, scheduled_at=at, signal="S", entity=f"e{i}",
+               user_params_key=pk)
+
+
+def test_job_bin_id_interns_bin_key():
+    j1 = _mk_job(1)
+    j2 = _mk_job(2)                             # same bin, different job
+    j3 = _mk_job(3, at=2 * HOUR)                # different bin
+    assert j1.bin_key == j2.bin_key
+    assert j1.bin_id == j2.bin_id
+    assert j1.bin_id != j3.bin_id
+    assert bin_key_of(j1.bin_id) == j1.bin_key
+    assert j1.bin_id == j1.bin_id               # memo stable
+
+
+@pytest.mark.parametrize("n", [5, 96, 500])
+def test_bin_jobs_vectorized_matches_dict_reference(n):
+    """The >= _VECTORIZE_MIN numpy path must be bitwise-indistinguishable
+    from plain dict grouping: same keys, same first-appearance key order,
+    same within-bin member order."""
+    rng = np.random.default_rng(n)
+    jobs = [_mk_job(i,
+                    pkg=f"p{rng.integers(3)}",
+                    task=("train", "score")[int(rng.integers(2))],
+                    at=float(rng.integers(1, 5)) * HOUR,
+                    pk=f"k{rng.integers(2)}")
+            for i in range(n)]
+    got = bin_jobs(jobs)
+    want = {}
+    for j in jobs:
+        want.setdefault(j.bin_key, []).append(j)
+    assert list(got.keys()) == list(want.keys())    # first-appearance order
+    assert got == want                              # identical members
+
+
+def test_affinity_key_interned_and_order_insensitive():
+    from repro.serverless.payload import affinity_key
+    j1, j2 = _mk_job(1), _mk_job(2)
+    k12 = affinity_key([j1, j2])
+    assert isinstance(k12, int)
+    assert affinity_key([j2, j1]) == k12        # member order irrelevant
+    assert affinity_key([j1, j2]) == k12        # stable across calls
+    # train/score halves and catch-up stamps of one logical bin coincide
+    j1t = _mk_job(1, task="train")
+    j2t = _mk_job(2, task="train", at=2 * HOUR)
+    assert affinity_key([j1t, j2t]) == k12
+    # different deployment set or params -> different warm container
+    assert affinity_key([j1]) != k12
+    assert affinity_key([_mk_job(1, pk="other"), j2]) != k12
