@@ -64,6 +64,36 @@ def control_plane_table() -> str:
     ])
 
 
+DETECTION_ART = Path("BENCH_detection.json")
+
+
+def detection_table() -> str:
+    """Minutely fleet-vectorized anomaly detection from the artifact
+    written by benchmarks.bench_detection."""
+    if not DETECTION_ART.exists():
+        return "_no BENCH_detection.json — run " \
+               "`python -m benchmarks.bench_detection` first_"
+    r = json.loads(DETECTION_ART.read_text())
+    tag = " (SMOKE: small fleet, ungated)" if r.get("smoke") else ""
+    b = r["bin"]
+    return "\n".join([
+        f"Minutely detection{tag}: one batched band-compare per bin over "
+        f"n={r['n']:,} sensors — **{r['speedup']:.1f}x** the per-sensor "
+        f"fallback path (interleaved min-of-{r['polls']} polls; serial "
+        f"detect() loop bitwise-equal to the fleet records).",
+        "",
+        "| path | poll (ms) | per sensor (us) | store reads |",
+        "|---|---|---|---|",
+        f"| fleet bin ({b['dispatches']} dispatch) "
+        f"| {r['fleet_poll_s'] * 1e3:.1f} | {r['per_sensor_us']:.1f} "
+        f"| {b['read_many_calls']} read_many / {b['single_reads']} single |",
+        f"| per-sensor fallback pool | {r['fallback_poll_s'] * 1e3:.1f} "
+        f"| {r['fallback_poll_s'] / r['n'] * 1e6:.1f} | n single reads |",
+        f"| serial detect() loop | {r['loop_serial_s'] * 1e3:.1f} "
+        f"| {r['loop_serial_s'] / r['n'] * 1e6:.1f} | n single reads |",
+    ])
+
+
 INVOKE_ART = Path("BENCH_invocations.json")
 
 
@@ -225,3 +255,5 @@ if __name__ == "__main__":
     print(steady_state_table())
     print("\n### Control-plane poll scaling\n")
     print(control_plane_table())
+    print("\n### Minutely anomaly-detection flow\n")
+    print(detection_table())

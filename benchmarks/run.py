@@ -8,11 +8,11 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_control_plane, bench_fig2_ingestion,
-                   bench_fig4_transform, bench_kernels, bench_roofline,
-                   bench_steady_state, bench_table1_models,
-                   bench_table2_sites, bench_table3_invocations,
-                   bench_table3_scalability)
+    from . import (bench_control_plane, bench_detection,
+                   bench_fig2_ingestion, bench_fig4_transform,
+                   bench_kernels, bench_roofline, bench_steady_state,
+                   bench_table1_models, bench_table2_sites,
+                   bench_table3_invocations, bench_table3_scalability)
     benches = [
         ("fig2", bench_fig2_ingestion),
         ("fig4", bench_fig4_transform),
@@ -22,6 +22,7 @@ def main() -> None:
         ("table3_invoke", bench_table3_invocations),
         ("steady", bench_steady_state),
         ("control_plane", bench_control_plane),
+        ("detection", bench_detection),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

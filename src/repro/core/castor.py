@@ -28,6 +28,8 @@ class Castor:
         self.deployments = DeploymentStore()
         self.versions = ModelVersionStore()
         self.predictions = PredictionStore()
+        from ..flows.detection import DetectionStore
+        self.detections = DetectionStore(self.store, self.graph)
         self.weather = WeatherService(seed=weather_seed)
         self.scheduler = ModelScheduler(self.deployments, self.registry)
 
@@ -55,6 +57,13 @@ class Castor:
 
     def deploy_for_all(self, **kw) -> List[ModelDeployment]:
         return deploy_for_all(self.graph, self.deployments, **kw)
+
+    def deploy_detections(self, **kw) -> List[ModelDeployment]:
+        """Detection-flow fleet deployment: one minutely
+        ``DetectionDeployment`` per entity carrying ``signal`` (see
+        repro.flows.detection.deploy_detections_for_all)."""
+        from ..flows.detection import deploy_detections_for_all
+        return deploy_detections_for_all(self.graph, self.deployments, **kw)
 
     def undeploy(self, name: str) -> None:
         """Remove a deployment. The store's listener protocol clears the
@@ -147,8 +156,21 @@ class Castor:
         hook so the next fleet read is a pure binary-search slice)."""
         self.store.compact()
 
-    def best_forecast(self, signal: str, entity: str, at: Optional[float] = None):
-        return self.predictions.latest(signal, entity, at)
+    def best_forecast(self, signal: str, entity: str,
+                      at: Optional[float] = None, *,
+                      return_bands: bool = False):
+        """Best-ranked most-recent forecast for a context (``at=`` replays
+        the forecast a live consumer would have seen at that instant).
+        With ``return_bands=True`` returns ``(times, values, lower,
+        upper)`` — the q10/q90 prediction band alongside the point
+        forecast (lower/upper are None for band-less models) — or None if
+        no forecast exists."""
+        fc = self.predictions.latest(signal, entity, at)
+        if not return_bands:
+            return fc
+        if fc is None:
+            return None
+        return fc.times, fc.values, fc.lower, fc.upper
 
     def stats(self) -> dict:
         st = self.store.stats()
@@ -158,9 +180,13 @@ class Castor:
                "store_reads": st["reads"],
                "store_read_many": st["read_many"],
                "deployments": len(self.deployments),
+               "deployments_by_flow": self.deployments.flow_counts(),
                "deployment_revision": self.deployments.revision,
                "model_versions": self.versions.count(),
                "forecasts": self.predictions.count(),
+               # detection-flow telemetry: records, scored readings,
+               # anomalies flagged, band-miss rate (flows/detection.py)
+               "detection": self.detections.stats(),
                # control-plane telemetry: calendar-queue depth + interned
                # bin count (core/scheduler.py)
                "scheduler": self.scheduler.stats()}
@@ -190,7 +216,9 @@ class Castor:
         return False
 
 
+MINUTE = 60.0
 HOUR = 3600.0
 DAY = 24 * HOUR
 WEEK = 7 * DAY
-__all__ = ["Castor", "Schedule", "ModelDeployment", "HOUR", "DAY", "WEEK"]
+__all__ = ["Castor", "Schedule", "ModelDeployment", "MINUTE", "HOUR",
+           "DAY", "WEEK"]

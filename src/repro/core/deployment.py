@@ -26,6 +26,12 @@ class ModelDeployment:
     score: Optional[Schedule] = None
     user_params: Dict = field(default_factory=dict)
     rank: int = 0                   # paper's model-ranking mechanism (0 = best)
+    # ---- flow typing ----
+    # "forecast" deployments train/score as always; other flow kinds (the
+    # minutely "detection" flow in repro.flows) schedule different tasks
+    # against the same context. Indexed by DeploymentStore.for_flow.
+    flow: str = "forecast"
+    detect: Optional[Schedule] = None
 
     def to_json(self) -> str:
         d = asdict(self)
@@ -51,6 +57,7 @@ class DeploymentStore:
         self._sorted: Optional[List[ModelDeployment]] = None
         self._by_context: Dict[tuple, Dict[str, ModelDeployment]] = {}
         self._by_package: Dict[str, Dict[str, ModelDeployment]] = {}
+        self._by_flow: Dict[str, Dict[str, ModelDeployment]] = {}
         self._revision = 0
         self._listeners: List = []
 
@@ -74,6 +81,8 @@ class DeploymentStore:
         self._deps[dep.name] = dep
         self._by_context.setdefault(dep.context_key, {})[dep.name] = dep
         self._by_package.setdefault(dep.package, {})[dep.name] = dep
+        self._by_flow.setdefault(
+            getattr(dep, "flow", "forecast"), {})[dep.name] = dep
         self._sorted = None
         self._revision += 1
         for sub in self._listeners:
@@ -85,7 +94,8 @@ class DeploymentStore:
         if dep is None:
             return
         for index, key in ((self._by_context, dep.context_key),
-                           (self._by_package, dep.package)):
+                           (self._by_package, dep.package),
+                           (self._by_flow, getattr(dep, "flow", "forecast"))):
             bucket = index.get(key)
             if bucket is not None:
                 bucket.pop(name, None)
@@ -122,6 +132,17 @@ class DeploymentStore:
         strand?')."""
         out = self._by_package.get(package, {})
         return sorted(out.values(), key=lambda d: d.name)
+
+    def for_flow(self, flow: str) -> List[ModelDeployment]:
+        """All deployments of one flow kind ("forecast", "detection", ...),
+        name-sorted (index hit, not a fleet scan)."""
+        out = self._by_flow.get(flow, {})
+        return sorted(out.values(), key=lambda d: d.name)
+
+    def flow_counts(self) -> Dict[str, int]:
+        """Per-flow deployment counts for ``Castor.stats()``."""
+        return {flow: len(bucket)
+                for flow, bucket in sorted(self._by_flow.items()) if bucket}
 
     def __len__(self):
         return len(self._deps)

@@ -46,6 +46,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from operator import attrgetter
 import traceback
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
@@ -56,6 +57,9 @@ import numpy as np
 from .lineage import Forecast
 from .registry import ModelInterface
 from .scheduler import Job, bin_jobs
+
+#: C-speed sort key — a python lambda per job is measurable at fleet width
+_BY_TIME = attrgetter("scheduled_at")
 
 
 @dataclass
@@ -108,6 +112,20 @@ class _ExecBase(Executor):
                    user_params=up, system=self.system)
 
     def _run_one(self, job: Job) -> Any:
+        if job.task == "detect":
+            # compare live readings against the band a LIVE poller would
+            # have had at this boundary (same at= replay semantics as
+            # scoring below); the detector persists through the idempotent
+            # DetectionStore, so duplicate executions stay exactly-once
+            fc = self.system.predictions.latest(job.signal, job.entity,
+                                                at=job.scheduled_at)
+            if fc is None or fc.lower is None:
+                raise RuntimeError(
+                    f"no banded forecast for {job.signal}@{job.entity}")
+            inst = self._instantiate(job, latest=None)
+            rec = inst.detect(fc)
+            self.system.detections.save(rec)
+            return {"detected": True, "score": rec.score}
         inst = self._instantiate(job)
         if job.task == "train":
             t0 = time.perf_counter()
@@ -124,13 +142,19 @@ class _ExecBase(Executor):
                                           at=job.scheduled_at)
         if latest is None:
             raise RuntimeError(f"no trained version for {job.deployment_name}")
-        times, values = inst.score(latest.params)
+        res = inst.score(latest.params)
+        # forecasters return (times, values, lower, upper); third-party
+        # 2-tuple implementations persist band-less forecasts
+        times, values = res[0], res[1]
+        lower, upper = (res[2], res[3]) if len(res) > 2 else (None, None)
         dep = self.system.deployments.get(job.deployment_name)
         self.system.predictions.save(Forecast(
             deployment_name=job.deployment_name, signal=job.signal,
             entity=job.entity, created_at=job.scheduled_at,
             times=np.asarray(times), values=np.asarray(values),
-            model_version=latest.version, rank=dep.rank))
+            model_version=latest.version, rank=dep.rank,
+            lower=None if lower is None else np.asarray(lower),
+            upper=None if upper is None else np.asarray(upper)))
         return {"scored": True, "points": len(times)}
 
 
@@ -149,11 +173,14 @@ class LocalPoolExecutor(_ExecBase):
 
     def run(self, jobs: List[Job]) -> List[JobResult]:
         """Dependency phases: all due TRAIN jobs complete before SCORE jobs
-        start (a scoring job may consume the version trained this cycle)."""
+        start (a scoring job may consume the version trained this cycle),
+        and DETECT jobs run last (a detection may consume the band scored
+        this cycle)."""
         trains = [j for j in jobs if j.task == "train"]
-        scores = [j for j in jobs if j.task != "train"]
+        detects = [j for j in jobs if j.task == "detect"]
+        scores = [j for j in jobs if j.task not in ("train", "detect")]
         out: List[JobResult] = []
-        for phase in (trains, scores):
+        for phase in (trains, scores, detects):
             out.extend(self._run_phase(phase))
         return out
 
@@ -265,6 +292,14 @@ class FleetExecutor(_ExecBase):
             from .runtime import FleetRuntime
             self.runtime = FleetRuntime(system)
         self.last_bin_stats: List[dict] = []
+        # detect-bin instance cache: detector instances are pure wiring
+        # (context + params + system handle, no trained state), identical
+        # from one minutely boundary to the next — rebuild only when the
+        # deployment store mutates (keyed on its revision)
+        self._detect_instances: dict = {}
+        # detect-bin band cache: resolved bands per bin, invalidated by
+        # PredictionStore.mutations / max_created (see _run_bin)
+        self._detect_bands: dict = {}
 
     def run(self, jobs: List[Job]) -> List[JobResult]:
         """Phase ordering is the executor's responsibility, not the
@@ -273,12 +308,25 @@ class FleetExecutor(_ExecBase):
         LocalPoolExecutor.run."""
         out: List[JobResult] = []
         self.last_bin_stats = []
-        trains = [j for j in jobs if j.task == "train"]
-        scores = [j for j in jobs if j.task != "train"]
-        for phase in (trains, scores):
+        # single-pass phase partition (three filter scans over a fleet-wide
+        # poll were measurable at minutely-detection width)
+        trains: List[Job] = []
+        detects: List[Job] = []
+        scores: List[Job] = []
+        t_append, d_append, s_append = (trains.append, detects.append,
+                                        scores.append)
+        for j in jobs:
+            task = j.task
+            if task == "detect":
+                d_append(j)
+            elif task == "train":
+                t_append(j)
+            else:
+                s_append(j)
+        for phase in (trains, scores, detects):
             # chronological bins regardless of caller order: catch-up
             # occurrences of one deployment must train/score oldest first
-            phase.sort(key=lambda j: j.scheduled_at)
+            phase.sort(key=_BY_TIME)
             fleet_bins: List[Tuple[tuple, List[Job]]] = []
             pool_jobs: List[Job] = []
             for key, bin_jobs_ in bin_jobs(phase).items():
@@ -325,7 +373,47 @@ class FleetExecutor(_ExecBase):
         r0 = getattr(store, "read_count", 0)
         task = key[2]
         latests: List = []
-        if task != "train":
+        bands: List = []
+        if task == "detect":
+            # a detection compares against the band a LIVE poller would
+            # have had at its boundary (predictions.latest honors rank and
+            # at=, the same replay semantics scoring uses for versions); a
+            # context with no banded forecast yet fails ALONE, the rest of
+            # the bin detects
+            preds = self.system.predictions
+            at = float(bin_jobs_[0].scheduled_at)
+            bkey = (key[0], key[1],
+                    tuple(j.deployment_name for j in bin_jobs_))
+            # band cache across minutely polls: the resolved bands can
+            # only change when a forecast lands (mutations moves) or when
+            # a later ``at`` admits an already-stored forecast — excluded
+            # by max_created <= cached_at <= at
+            cached = self._detect_bands.get(bkey)
+            if cached is not None and cached[0] == preds.mutations \
+                    and preds.max_created <= cached[1] <= at:
+                bands = cached[2]
+            else:
+                n_bin = len(bin_jobs_)
+                present = []
+                for j in bin_jobs_:
+                    fc = preds.latest(j.signal, j.entity,
+                                      at=j.scheduled_at)
+                    if fc is None or fc.lower is None:
+                        out.append(self._fail(
+                            j, 0.0,
+                            f"no banded forecast for {j.signal}"
+                            f"@{j.entity}"))
+                    else:
+                        present.append(j)
+                        bands.append(fc)
+                bin_jobs_ = present
+                if not bin_jobs_:
+                    return out
+                if len(present) == n_bin:       # full bin resolved: the
+                    if len(self._detect_bands) >= 8:    # bkey names match
+                        self._detect_bands.clear()
+                    self._detect_bands[bkey] = (preds.mutations, at, bands)
+        elif task != "train":
             # a deployment that was never trained fails ALONE: exclude it
             # from the megabatch, score the rest — one cold model must not
             # poison the whole bin (at-least-once still holds per job).
@@ -344,11 +432,31 @@ class FleetExecutor(_ExecBase):
             bin_jobs_ = present
             if not bin_jobs_:
                 return out
-        mesh = self._bin_mesh(bin_jobs_)
+        # detection is a host-side store compare, nothing to shard
+        mesh = None if task == "detect" else self._bin_mesh(bin_jobs_)
         ndev = len(mesh.devices.flat) if mesh is not None else 1
         pad = (-len(bin_jobs_)) % ndev
         if task == "train":
             instances = [self._instantiate(j, cls=cls) for j in bin_jobs_]
+        elif task == "detect":
+            ikey = bkey if len(bin_jobs_) == len(bkey[2]) else \
+                (key[0], key[1],
+                 tuple(j.deployment_name for j in bin_jobs_))
+            rev = self.system.deployments.revision
+            cached = self._detect_instances.get(ikey)
+            if cached is not None and cached[0] == rev:
+                _, instances, detect_ts_ids, detect_names = cached
+            else:
+                instances = [self._instantiate(j, latest=None, cls=cls)
+                             for j in bin_jobs_]
+                detect_ts_ids = [i.context.ts_id for i in instances]
+                detect_names = ([i.model_id for i in instances],
+                                [i.context.signal.name for i in instances],
+                                [i.context.entity.name for i in instances])
+                if len(self._detect_instances) >= 8:    # stale-rev bins
+                    self._detect_instances.clear()
+                self._detect_instances[ikey] = (rev, instances,
+                                                detect_ts_ids, detect_names)
         else:       # versions already resolved above: no second lookup
             instances = [self._instantiate(j, latest=mv, cls=cls)
                          for j, mv in zip(bin_jobs_, latests)]
@@ -368,24 +476,49 @@ class FleetExecutor(_ExecBase):
                         j.deployment_name, mo, trained_at=j.scheduled_at,
                         metadata={"fleet": True, "signal": j.signal,
                                   "entity": j.entity})
+            elif task == "detect":
+                # ONE vectorized band-compare for the whole bin (one
+                # read_many, no per-sensor python loop) through the
+                # idempotent DetectionStore — exactly-once per occurrence
+                records = cls.fleet_detect(
+                    instances, bands,
+                    now=float(bin_jobs_[0].scheduled_at),
+                    ts_ids=detect_ts_ids, names=detect_names)
+                self.system.detections.save_many(records)
             else:
                 preds = cls.fleet_score(instances,
                                         [l.params for l in latests],
                                         **kw)
-                self.system.predictions.save_many([Forecast(
-                    deployment_name=j.deployment_name, signal=j.signal,
-                    entity=j.entity, created_at=j.scheduled_at,
-                    times=times if isinstance(times, np.ndarray)
-                    else np.asarray(times),
-                    values=values if isinstance(values, np.ndarray)
-                    else np.asarray(values),
-                    model_version=l.version,
-                    rank=self.system.deployments.get(j.deployment_name).rank)
-                    for j, l, (times, values)
-                    in zip(bin_jobs_, latests, preds)])
+                fcs = []
+                for j, l, p in zip(bin_jobs_, latests, preds):
+                    times, values = p[0], p[1]
+                    lower, upper = (p[2], p[3]) if len(p) > 2 else (None,
+                                                                    None)
+                    fcs.append(Forecast(
+                        deployment_name=j.deployment_name, signal=j.signal,
+                        entity=j.entity, created_at=j.scheduled_at,
+                        times=times if isinstance(times, np.ndarray)
+                        else np.asarray(times),
+                        values=values if isinstance(values, np.ndarray)
+                        else np.asarray(values),
+                        model_version=l.version,
+                        rank=self.system.deployments.get(
+                            j.deployment_name).rank,
+                        lower=None if lower is None else np.asarray(lower),
+                        upper=None if upper is None else np.asarray(upper)))
+                self.system.predictions.save_many(fcs)
             dt = time.perf_counter() - t0
             per = dt / max(len(bin_jobs_), 1)
-            out.extend(JobResult(j, True, per) for j in bin_jobs_)
+            # dataclass __init__ per job is measurable at fleet width:
+            # stamp a shared field template and install per-job dicts
+            tmpl = {"job": None, "ok": True, "duration_s": per,
+                    "attempts": 1, "error": "", "output": None,
+                    "speculative_win": False}
+            new = JobResult.__new__
+            for j in bin_jobs_:
+                r = new(JobResult)
+                r.__dict__ = dict(tmpl, job=j)
+                out.append(r)
             rc1 = rollout_cache_stats()
             stats = {"bin": str(key), "bin_id": bin_jobs_[0].bin_id,
                      "jobs": len(bin_jobs_), "seconds": dt,

@@ -94,6 +94,11 @@ class Forecast:
     values: np.ndarray
     model_version: int
     rank: int = 0
+    # q10/q90 prediction band (same shape as values); None for models that
+    # predate bands or don't emit residual quantiles. The detection flow
+    # compares live readings against these.
+    lower: Optional[np.ndarray] = None
+    upper: Optional[np.ndarray] = None
 
 
 class PredictionStore:
@@ -109,6 +114,17 @@ class PredictionStore:
         self._by_ctx: Dict[Tuple[str, str], List[Forecast]] = {}
         self._seen: set = set()
         self._lock = threading.Lock()
+        # latest(at=) memo per context: (history_len, chosen, next_created)
+        # — a minutely detection fleet resolves its band at every boundary,
+        # and the answer only changes when a forecast lands or ``at``
+        # crosses the next created_at
+        self._latest_memo: Dict[Tuple[str, str], tuple] = {}
+        # cache-invalidation surface for executors holding resolved band
+        # lists across polls: ``mutations`` bumps on every FRESH save;
+        # ``max_created`` bounds the created_at a later ``at`` could newly
+        # admit (see FleetExecutor's detect band cache)
+        self.mutations = 0
+        self.max_created = -float("inf")
 
     def save(self, fc: Forecast) -> Forecast:
         with self._lock:
@@ -130,6 +146,9 @@ class PredictionStore:
         self._seen.add(key)
         self._by_dep.setdefault(fc.deployment_name, []).append(fc)
         self._by_ctx.setdefault((fc.signal, fc.entity), []).append(fc)
+        self.mutations += 1
+        if fc.created_at > self.max_created:
+            self.max_created = float(fc.created_at)
 
     def history(self, deployment_name: str) -> List[Forecast]:
         """Full lineage — every rolling-horizon forecast ever produced."""
@@ -143,13 +162,31 @@ class PredictionStore:
         """Best-ranked most-recent forecast for a context (ranking mechanism):
         downstream apps retrieve by semantics only, without knowing which
         model produced the prediction."""
-        cand = [f for f in self.for_context(signal, entity)
-                if at is None or f.created_at <= at]
+        hist = self._by_ctx.get((signal, entity))
+        if not hist:
+            return None
+        if at is not None:
+            # memo fast path: history append-only, so an unchanged length
+            # means the same candidate set; the memoized choice stands
+            # while ``at`` sits below the next created_at after it
+            m = self._latest_memo.get((signal, entity))
+            if m is not None:
+                n, fc, nxt = m
+                if n == len(hist) and fc.created_at <= at \
+                        and (nxt is None or at < nxt):
+                    return fc
+        hist = list(hist)
+        cand = [f for f in hist if at is None or f.created_at <= at]
         if not cand:
             return None
         newest = max(f.created_at for f in cand)
         newest_set = [f for f in cand if f.created_at == newest]
-        return min(newest_set, key=lambda f: (f.rank, f.deployment_name))
+        best = min(newest_set, key=lambda f: (f.rank, f.deployment_name))
+        if at is not None:
+            later = [f.created_at for f in hist if f.created_at > at]
+            self._latest_memo[(signal, entity)] = \
+                (len(hist), best, min(later) if later else None)
+        return best
 
     def horizons(self, deployment_name: str, target_time: float,
                  tol: float = 1.0) -> List[Tuple[float, float]]:

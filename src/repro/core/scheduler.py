@@ -102,6 +102,12 @@ class Schedule:
 
 # ------------------------------------------------------------------ jobs
 
+#: every schedulable task name, in dependency order: trains feed scores
+#: (a scoring job may consume the version trained this cycle) and scores
+#: feed detects (a detection compares against the band scored this cycle)
+TASKS = ("train", "score", "detect")
+_TASK_ORDER = {t: i for i, t in enumerate(TASKS)}
+
 #: process-wide intern table for bin keys; ids are what the executors,
 #: the serverless invoker and the vectorized grouping below operate on
 BIN_KEYS = InternTable()
@@ -121,7 +127,7 @@ class Job:
     deployment_name: str
     package: str
     version: str                    # RESOLVED version (registry pinned at poll)
-    task: str                       # "train" | "score"
+    task: str                       # "train" | "score" | "detect"
     scheduled_at: float
     signal: str
     entity: str
@@ -188,8 +194,8 @@ class ModelScheduler:
         """Arm a wake-up at each schedule's start: ``occurrences_due(None,
         now)`` fires exactly when ``now >= start``, which is exactly when
         the entry pops."""
-        for task in ("train", "score"):
-            sched: Optional[Schedule] = getattr(dep, task)
+        for task in TASKS:
+            sched: Optional[Schedule] = getattr(dep, task, None)
             if sched is not None:
                 self._push(sched.start, dep.name, task)
 
@@ -201,7 +207,7 @@ class ModelScheduler:
         from scratch — and replayed the removed deployment's queued
         retries against the new one's schedules."""
         self._gen[name] = self._gen.get(name, 0) + 1
-        for task in ("train", "score"):
+        for task in TASKS:
             self._last.pop((name, task), None)
             self._failed.pop((name, task), None)
 
@@ -242,7 +248,7 @@ class ModelScheduler:
         try:
             for name, task in keys:
                 dep = self.deployments.get(name)
-                sched: Optional[Schedule] = getattr(dep, task)
+                sched: Optional[Schedule] = getattr(dep, task, None)
                 key = (name, task)
                 if sched is None:           # schedule dropped since arming
                     continue
@@ -285,9 +291,10 @@ class ModelScheduler:
                     version=version, task=task, scheduled_at=ts,
                     signal=dep.signal, entity=dep.entity,
                     user_params_key=self._params_key(dep.user_params)))
-        # deterministic order: training before scoring, then chronological
-        # (catch-up occurrences execute oldest first), then by name
-        jobs.sort(key=lambda j: (j.task != "train", j.scheduled_at,
+        # deterministic order: train before score before detect, then
+        # chronological (catch-up occurrences execute oldest first), then
+        # by name
+        jobs.sort(key=lambda j: (_TASK_ORDER.get(j.task, 1), j.scheduled_at,
                                  j.deployment_name))
         return jobs
 
@@ -340,6 +347,15 @@ def bin_jobs(jobs: List[Job]) -> Dict[Tuple, List[Job]]:
         for j in jobs:
             bins.setdefault(j.bin_key, []).append(j)
         return bins
+    # single-bin fast path on raw attributes: a uniform fleet phase (the
+    # steady-state minutely detect poll above all) is ONE bin, and per-job
+    # bin-key interning is measurable at fleet width
+    j0 = jobs[0]
+    p0, v0, t0 = j0.package, j0.version, j0.task
+    u0, s0 = j0.user_params_key, j0.scheduled_at
+    if all(j.scheduled_at == s0 and j.package == p0 and j.version == v0
+           and j.task == t0 and j.user_params_key == u0 for j in jobs):
+        return {j0.bin_key: list(jobs)}
     ids = np.fromiter((j.bin_id for j in jobs), dtype=np.int64, count=n)
     uniq, first, inv = np.unique(ids, return_index=True, return_inverse=True)
     order = np.argsort(inv, kind="stable")      # groups contiguous, members

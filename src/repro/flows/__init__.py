@@ -1,0 +1,26 @@
+"""Flow-typed deployments (ROADMAP item 2).
+
+A *flow* is a traffic class over the same semantic graph, store and
+scheduler. Two kinds exist today:
+
+* **forecast** — the original hourly train/score flow: every plain
+  ``ModelDeployment`` (``flow="forecast"``) behaves exactly as before.
+* **detection** — a minutely, read-mostly flow (``DetectionDeployment``)
+  that compares live readings against the q10/q90 prediction band of the
+  forecast flow's output and writes anomaly scores back as a derived
+  signal registered through the ``SemanticGraph``.
+
+Flows share the executors (detection bins are fleet-vectorized like
+score bins), the serverless path (DetectionRecords ride the invocation
+payload protocol with the same exactly-once guarantees), and the
+idempotent persistence layer.
+"""
+from .detection import (DetectionDeployment, DetectionRecord,
+                        DetectionStore, deploy_detections_for_all)
+
+__all__ = [
+    "DetectionDeployment",
+    "DetectionRecord",
+    "DetectionStore",
+    "deploy_detections_for_all",
+]

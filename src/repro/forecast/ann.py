@@ -154,6 +154,21 @@ class ANNForecaster(ForecastModelBase):
         return np.asarray(y)
 
     @classmethod
+    def _fleet_window_predict(cls, model_objects, X):
+        # full-window forward pass, vmapped over instances: (N, T, F) -> (N, T)
+        nl = N_HIDDEN_LAYERS + 1
+        p = {"w": [jnp.asarray(np.stack([m["params"][f"w{i}"]
+                                         for m in model_objects]), jnp.float32)
+                   for i in range(nl)],
+             "b": [jnp.asarray(np.stack([m["params"][f"b{i}"]
+                                         for m in model_objects]), jnp.float32)
+                   for i in range(nl)]}
+        ys = jnp.asarray([m["params"]["y_scale"] for m in model_objects],
+                         jnp.float32)
+        out = jax.vmap(_mlp_out)(p, jnp.asarray(X, jnp.float32), ys)
+        return np.asarray(out, np.float64)
+
+    @classmethod
     def _fleet_predict_traced(cls, stacked, x):
         """One megabatched fleet_mlp launch: per-instance weight stacks with
         a real leading batch dimension (the Pallas kernel's grid axis)."""

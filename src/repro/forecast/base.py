@@ -76,6 +76,35 @@ def rollout_cache_stats() -> dict:
     return _ROLLOUT_CACHE.stats()
 
 
+#: prediction-interval quantiles (lower, upper) for every forecaster's
+#: residual band — q10..q90, the band the detection flow compares against
+BAND_QUANTILES = (0.1, 0.9)
+
+
+def prediction_bands(model_object, values):
+    """(lower, upper) quantile bands around a rolled-out point forecast.
+
+    Bands come from the TRAINING residual quantiles persisted in the model
+    object (``resid_q``, one-step-ahead errors), widened by sqrt(h+1) per
+    horizon step — the standard recursive-forecast error growth heuristic:
+    step 0 is the raw one-step band, later steps widen as accumulated
+    prediction error compounds. Works per instance (``resid_q`` shape
+    ``(2,)``, values ``(H,)``) and per fleet bin (``(N, 2)`` / ``(N, H)``).
+    Returns ``(None, None)`` for model objects without residual quantiles
+    (third-party implementations, versions trained before bands existed) —
+    callers persist band-less forecasts rather than failing.
+    """
+    rq = model_object.get("resid_q") if isinstance(model_object, dict) \
+        else None
+    if rq is None:
+        return None, None
+    values = np.asarray(values, np.float64)
+    rq = np.asarray(rq, np.float64)
+    widen = np.sqrt(1.0 + np.arange(values.shape[-1], dtype=np.float64))
+    return (values + rq[..., 0, None] * widen,
+            values + rq[..., 1, None] * widen)
+
+
 class ForecastModelBase(ModelInterface):
     DEFAULTS = {"train_window_days": 28, "horizon": 24}
     #: the fleet hooks accept a ``runtime=`` kwarg (FleetRuntime): the
@@ -104,10 +133,14 @@ class ForecastModelBase(ModelInterface):
         import zlib                      # stable across processes (hash() is salted)
         rng = np.random.default_rng(zlib.crc32(self.model_id.encode()))
         params = self._fit(X, y, rng)
+        # one-step residuals over the training window feed the q10/q90
+        # prediction band persisted with every forecast (X is standardized)
+        resid = y - np.asarray(self._predict(params, X), np.float64)
         return {"kind": self.KIND, "params": params, "mu": mu, "sd": sd,
-                "y_scale": float(np.abs(y).max() + 1e-6)}
+                "y_scale": float(np.abs(y).max() + 1e-6),
+                "resid_q": np.quantile(resid, BAND_QUANTILES)}
 
-    def score(self, model_object) -> Tuple[np.ndarray, np.ndarray]:
+    def score(self, model_object):
         self.load()
         spec, times, target, temps, now = self._loaded
         up = {**self.DEFAULTS, **self.user_params}
@@ -124,7 +157,8 @@ class ForecastModelBase(ModelInterface):
 
         vals = recursive_forecast(predict, spec, target[-warm:], temps[-warm:],
                                   temps_future, now, H)
-        return fut_t, vals
+        lower, upper = prediction_bands(model_object, vals)
+        return fut_t, vals, lower, upper
 
     # ------------- fleet plumbing (stacked across instances) -------------
     @classmethod
@@ -219,13 +253,39 @@ class ForecastModelBase(ModelInterface):
         mu_h, sd_h = np.asarray(mu), np.asarray(sd)
         ymax = np.asarray(np.abs(np.asarray(y)).max(axis=1))
         out = []
+        yhat = cls._fleet_window_predict(
+            [{"params": {k: v[i] for k, v in host.items()}}
+             for i in range(len(instances))], np.asarray(X, np.float64))
+        resid = np.asarray(y, np.float64) - np.asarray(yhat, np.float64)
+        rq = np.quantile(resid, BAND_QUANTILES, axis=1).T      # (N, 2)
         for i, inst in enumerate(instances):
             pi = {k: v[i] for k, v in host.items()}
             out.append({"kind": cls.KIND, "params": pi, "mu": mu_h[i],
-                        "sd": sd_h[i], "y_scale": float(ymax[i] + 1e-6)})
+                        "sd": sd_h[i], "y_scale": float(ymax[i] + 1e-6),
+                        "resid_q": rq[i]})
         if state is not None:
             runtime.note_trained(state, params, mu, sd, out)
         return out
+
+    @classmethod
+    def _fleet_window_predict(cls, model_objects, X: np.ndarray) -> np.ndarray:
+        """One-step predictions over each instance's full standardized
+        training design: ``X (N, T, F) -> (N, T)``. Feeds the per-instance
+        training-residual quantiles behind prediction bands. The default
+        loops instances through ``_predict`` (none of the built-in
+        predictors touch ``self``); each forecaster overrides with a
+        batched path."""
+        return np.stack([
+            np.asarray(cls._predict(cls, m["params"], X[i]), np.float64)
+            for i, m in enumerate(model_objects)])
+
+    @classmethod
+    def _attach_bands(cls, model_objects, results):
+        """Zip per-instance quantile bands onto ``(times, values)`` fleet
+        results — shared by the device-runtime and cold scoring paths so
+        both return the same 4-tuple shape."""
+        return [(t, v, *prediction_bands(m, v))
+                for m, (t, v) in zip(model_objects, results)]
 
     @classmethod
     def fleet_score(cls, instances: List[ModelInterface], model_objects, *,
@@ -234,7 +294,7 @@ class ForecastModelBase(ModelInterface):
             res = runtime.fleet_score(cls, instances, model_objects,
                                       mesh=mesh)
             if res is not None:
-                return res
+                return cls._attach_bands(model_objects, res)
         cls.fleet_load(instances)
         cls._require_one_window(instances)
         # jobs in a bin share user_params_key: one merge speaks for all
@@ -274,7 +334,8 @@ class ForecastModelBase(ModelInterface):
 
             vals = recursive_forecast(predict, spec, y_hist, temp_hist,
                                       temps_fut, t_start, H)
-        return [(fut_ts[i], vals[i]) for i in range(len(instances))]
+        return cls._attach_bands(
+            model_objects, [(fut_ts[i], vals[i]) for i in range(len(instances))])
 
     # ------------- device-resident scoring rollout -------------
     @classmethod

@@ -135,6 +135,20 @@ class GAMForecaster(ForecastModelBase):
         return out
 
     @classmethod
+    def _fleet_window_predict(cls, model_objects, X):
+        # knots differ per instance -> loop the expansion; each row is the
+        # full (T, Fe) expanded design so the matmul stays batched per
+        # instance
+        X = np.asarray(X)
+        out = []
+        for i, m in enumerate(model_objects):
+            p = m["params"]
+            Xe = _expand(X[i], list(p["knots"]), list(p["cols"]))
+            th = p["theta"]
+            out.append(Xe @ th[:-1] + th[-1])
+        return np.stack(out)
+
+    @classmethod
     def _rollout_statics(cls, up, stacked):
         # the columns the model was FITTED with (shared across the bin) —
         # static python ints, part of the compiled-rollout cache key

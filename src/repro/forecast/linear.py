@@ -74,6 +74,13 @@ class LinearForecaster(ForecastModelBase):
         return np.einsum("nf,nf->n", np.asarray(X), th[:, :-1]) + th[:, -1]
 
     @classmethod
+    def _fleet_window_predict(cls, model_objects, X):
+        # (N, T, F) design against per-instance theta in one einsum
+        th = np.stack([m["params"]["theta"] for m in model_objects])
+        return (np.einsum("ntf,nf->nt", np.asarray(X), th[:, :-1])
+                + th[:, -1][:, None])
+
+    @classmethod
     def _fleet_predict_traced(cls, stacked, x):
         th = jnp.asarray(stacked["theta"], jnp.float32)
         return jnp.einsum("nf,nf->n", x, th[:, :-1]) + th[:, -1]

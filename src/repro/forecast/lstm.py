@@ -152,6 +152,19 @@ class LSTMForecaster(ForecastModelBase):
         return np.asarray(out)
 
     @classmethod
+    def _fleet_window_predict(cls, model_objects, X):
+        # whole training window per instance in one vmapped forward pass:
+        # rows become the LSTM batch axis, lags reversed to time order
+        p = {k: jnp.asarray(np.stack([m["params"][k] for m in model_objects]),
+                            jnp.float32)
+             for k in model_objects[0]["params"] if k != "y_scale"}
+        ys = jnp.asarray([m["params"]["y_scale"] for m in model_objects],
+                         jnp.float32)
+        seqs = jnp.asarray(np.asarray(X)[:, :, ::-1], jnp.float32)
+        out = jax.vmap(_lstm_out)(p, seqs, ys)
+        return np.asarray(out, np.float64)
+
+    @classmethod
     def _fleet_predict_traced(cls, stacked, x):
         p = {k: jnp.asarray(v, jnp.float32) for k, v in stacked.items()
              if k != "y_scale"}

@@ -65,8 +65,8 @@ from .autoscale import AutoscalePolicy, Autoscaler
 from .backend import InlineBackend, InvocationBackend
 from .futures import ResponseFuture
 from .monitor import InvocationMonitor
-from .payload import (InvocationPayload, InvocationResult, JobRef,
-                      VersionRef, affinity_key)
+from .payload import (ForecastBlob, InvocationPayload, InvocationResult,
+                      JobRef, VersionRef, affinity_key)
 
 
 class _Phase:
@@ -124,8 +124,12 @@ class ServerlessInvoker:
     def run(self, jobs: List[Job]) -> List[JobResult]:
         out: List[JobResult] = []
         trains = [j for j in jobs if j.task == "train"]
-        scores = [j for j in jobs if j.task != "train"]
-        for phase in (trains, scores):        # global train->score barrier
+        detects = [j for j in jobs if j.task == "detect"]
+        scores = [j for j in jobs if j.task not in ("train", "detect")]
+        # global train->score->detect barriers: a scoring action may
+        # consume a version trained this cycle on a different worker, and
+        # a detection compares against a band scored this cycle
+        for phase in (trains, scores, detects):
             out.extend(self._run_phase(phase))
         if self.autoscaler is not None:
             self.autoscaler.reap_idle()
@@ -139,14 +143,16 @@ class ServerlessInvoker:
         — the streaming surface ``futures.wait(..., ANY_COMPLETED)``
         consumes. Jobs that fail planning (score with no trained version)
         are marked failed at the scheduler and re-fire there; mixing
-        train and score in one submission is rejected because the
-        train->score barrier cannot be enforced asynchronously."""
-        tasks = {j.task == "train" for j in jobs}
+        task kinds in one submission is rejected because the
+        train->score->detect barriers cannot be enforced
+        asynchronously."""
+        tasks = {j.task for j in jobs}
         if len(tasks) > 1:
             raise ValueError(
-                "submit() is single-phase: train and score jobs cannot "
-                "share one async submission (train->score barrier); "
-                "use run() or two submit() calls")
+                "submit() is single-phase: jobs of different tasks "
+                f"({sorted(tasks)}) cannot share one async submission "
+                "(train->score->detect barriers); use run() or one "
+                "submit() call per task")
         results: List[JobResult] = []
         invocations = self._plan(jobs, results)
         state = _Phase(invocations, results)
@@ -172,7 +178,28 @@ class ServerlessInvoker:
         workers = list(routed)
         for key, bjs in bin_jobs(jobs).items():
             resolved: Dict[Tuple[str, float], object] = {}
-            if key[2] != "train":
+            bands: Dict[Tuple[str, float], object] = {}
+            if key[2] == "detect":
+                # a detection needs the banded forecast a live poller
+                # would have had at its boundary; a context with no band
+                # yet fails ALONE (mirrors FleetExecutor's partial bin)
+                present = []
+                for j in bjs:
+                    fc = self.system.predictions.latest(
+                        j.signal, j.entity, at=j.scheduled_at)
+                    if fc is None or fc.lower is None:
+                        self.system.scheduler.mark_failed(j)
+                        results.append(JobResult(
+                            j, False, 0.0,
+                            error=f"no banded forecast for "
+                                  f"{j.signal}@{j.entity}"))
+                    else:
+                        present.append(j)
+                        bands[(j.deployment_name, j.scheduled_at)] = fc
+                bjs = present
+                if not bjs:
+                    continue
+            elif key[2] != "train":
                 present = []
                 for j in bjs:
                     mv = self.system.versions.get(j.deployment_name,
@@ -195,7 +222,8 @@ class ServerlessInvoker:
                 w = workers[self._rr % len(workers)]
                 self._rr += 1
                 self._affinity[ak] = w
-            routed[w].append({"jobs": bjs, "ak": ak, "resolved": resolved})
+            routed[w].append({"jobs": bjs, "ak": ak, "resolved": resolved,
+                              "bands": bands})
         invocations: List[dict] = []
 
         def cut(worker: str, bins: List[dict]) -> None:
@@ -203,17 +231,33 @@ class ServerlessInvoker:
             jobs_ = [j for b in bins for j in b["jobs"]]
             resolved = {k: mv for b in bins
                         for k, mv in b["resolved"].items()}
+            bands_ = {k: fc for b in bins for k, fc in b["bands"].items()}
             versions: Tuple[VersionRef, ...] = ()
+            band_blobs: Tuple[ForecastBlob, ...] = ()
             if self.backend.wants_artifacts and resolved:
                 versions = tuple(
                     VersionRef(deployment_name=name, version=mv.version,
                                trained_at=mv.trained_at,
                                model_object=mv.params)
                     for (name, _at), mv in resolved.items())
+            if self.backend.wants_artifacts and bands_:
+                # the banded forecasts a detect action compares against:
+                # shipped as data so a share-nothing worker replays the
+                # invoker's ``at=`` resolution bitwise
+                band_blobs = tuple(
+                    ForecastBlob(deployment_name=fc.deployment_name,
+                                 signal=fc.signal, entity=fc.entity,
+                                 created_at=fc.created_at, times=fc.times,
+                                 values=fc.values,
+                                 model_version=fc.model_version,
+                                 rank=fc.rank, lower=fc.lower,
+                                 upper=fc.upper)
+                    for fc in bands_.values())
             payload = InvocationPayload(
                 invocation_id=f"inv-{self._seq:06d}",
                 jobs=tuple(JobRef.from_job(j) for j in jobs_),
-                versions=versions, created_at=time.time())
+                versions=versions, bands=band_blobs,
+                created_at=time.time())
             invocations.append({"payload": payload, "worker": worker,
                                 "aks": [b["ak"] for b in bins],
                                 "resolved": resolved})
@@ -520,9 +564,26 @@ class ServerlessInvoker:
                     # replica's (their histories can differ)
                     model_version=(mv.version if mv is not None
                                    else fb.model_version),
-                    rank=dep.rank))
+                    rank=dep.rank,
+                    lower=(None if fb.lower is None
+                           else np.asarray(fb.lower)),
+                    upper=(None if fb.upper is None
+                           else np.asarray(fb.upper))))
             if fcs:
                 self.system.predictions.save_many(fcs)
+            if result.detections:
+                from ..flows.detection import DetectionRecord
+                self.system.detections.save_many([
+                    DetectionRecord(
+                        deployment_name=db.deployment_name,
+                        signal=db.signal, entity=db.entity,
+                        scheduled_at=db.scheduled_at, score=db.score,
+                        n_readings=db.n_readings,
+                        n_anomalies=db.n_anomalies,
+                        band_misses=db.band_misses,
+                        model_version=db.model_version,
+                        derived_signal=db.derived_signal)
+                    for db in result.detections])
         out = []
         for o in result.outcomes:
             job = o.ref.to_job()

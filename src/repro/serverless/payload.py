@@ -115,6 +115,29 @@ class ForecastBlob:
     values: np.ndarray
     model_version: int
     rank: int = 0
+    # q10/q90 prediction band (None for band-less models) — also what a
+    # detection payload ships TO workers as the band to compare against
+    lower: Optional[np.ndarray] = None
+    upper: Optional[np.ndarray] = None
+
+
+@dataclass(frozen=True)
+class DetectionBlob:
+    """A worker-produced detection occurrence, shipped back for the
+    invoker to persist (idempotent on (deployment, scheduled_at)) — the
+    detection flow's twin of ``ForecastBlob``. Fields mirror
+    ``flows.detection.DetectionRecord``; all primitives, so the JSON
+    round-trip is trivially bitwise."""
+    deployment_name: str
+    signal: str
+    entity: str
+    scheduled_at: float
+    score: float
+    n_readings: int
+    n_anomalies: int
+    band_misses: int
+    model_version: int
+    derived_signal: str
 
 
 # ---------------------------------------------------------------- payload
@@ -129,6 +152,7 @@ class InvocationPayload:
     invocation_id: str
     jobs: Tuple[JobRef, ...]
     versions: Tuple[VersionRef, ...] = ()      # score-phase artifacts
+    bands: Tuple[ForecastBlob, ...] = ()       # detect-phase artifacts
     created_at: float = 0.0                    # wall-clock enqueue time
     attempt: int = 1
 
@@ -149,6 +173,7 @@ class InvocationPayload:
         return cls(invocation_id=d["invocation_id"],
                    jobs=tuple(JobRef(**j) for j in d["jobs"]),
                    versions=tuple(VersionRef(**v) for v in d["versions"]),
+                   bands=tuple(ForecastBlob(**b) for b in d.get("bands", ())),
                    created_at=d["created_at"], attempt=d["attempt"])
 
 
@@ -175,6 +200,7 @@ class InvocationResult:
     outcomes: Tuple[JobOutcome, ...]
     versions: Tuple[VersionRef, ...] = ()
     forecasts: Tuple[ForecastBlob, ...] = ()
+    detections: Tuple[DetectionBlob, ...] = ()
 
     def to_json(self) -> str:
         return json.dumps(_enc(asdict(self)))
@@ -189,7 +215,9 @@ class InvocationResult:
             outcomes=tuple(JobOutcome(ref=JobRef(**o.pop("ref")), **o)
                            for o in d["outcomes"]),
             versions=tuple(VersionRef(**v) for v in d["versions"]),
-            forecasts=tuple(ForecastBlob(**f) for f in d["forecasts"]))
+            forecasts=tuple(ForecastBlob(**f) for f in d["forecasts"]),
+            detections=tuple(DetectionBlob(**x)
+                             for x in d.get("detections", ())))
 
 
 #: process-wide intern table for affinity keys: the invoker's routing

@@ -27,8 +27,8 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from .chaos import ChaosKill, ChaosPolicy
-from .payload import (ForecastBlob, InvocationPayload, InvocationResult,
-                      JobOutcome, JobRef, VersionRef)
+from .payload import (DetectionBlob, ForecastBlob, InvocationPayload,
+                      InvocationResult, JobOutcome, JobRef, VersionRef)
 
 
 class Worker:
@@ -60,6 +60,23 @@ class Worker:
             self.system.versions.save(vr.deployment_name, vr.model_object,
                                       trained_at=vr.trained_at,
                                       metadata={"delivered": True})
+        # likewise the banded forecasts a detect action compares against:
+        # idempotent on (deployment, created_at), so a replica that scored
+        # the band itself (or a re-delivery) no-ops
+        if payload.bands:
+            from ..core.lineage import Forecast
+            self.system.predictions.save_many([
+                Forecast(deployment_name=fb.deployment_name,
+                         signal=fb.signal, entity=fb.entity,
+                         created_at=fb.created_at,
+                         times=np.asarray(fb.times),
+                         values=np.asarray(fb.values),
+                         model_version=fb.model_version, rank=fb.rank,
+                         lower=(None if fb.lower is None
+                                else np.asarray(fb.lower)),
+                         upper=(None if fb.upper is None
+                                else np.asarray(fb.upper)))
+                for fb in payload.bands])
         jobs = [r.to_job() for r in payload.jobs]
         if chaos is not None:
             chaos.maybe_delay(payload)
@@ -87,6 +104,7 @@ class Worker:
             for r in results)
         versions: List[VersionRef] = []
         forecasts: List[ForecastBlob] = []
+        detections: List[DetectionBlob] = []
         if self.collect_artifacts:
             for r in results:
                 if not r.ok:
@@ -98,6 +116,20 @@ class Worker:
                         deployment_name=r.job.deployment_name,
                         version=mv.version, trained_at=mv.trained_at,
                         model_object=mv.params))
+                elif r.job.task == "detect":
+                    for dr in reversed(self.system.detections.history(
+                            r.job.deployment_name)):
+                        if dr.scheduled_at == r.job.scheduled_at:
+                            detections.append(DetectionBlob(
+                                deployment_name=dr.deployment_name,
+                                signal=dr.signal, entity=dr.entity,
+                                scheduled_at=dr.scheduled_at,
+                                score=dr.score, n_readings=dr.n_readings,
+                                n_anomalies=dr.n_anomalies,
+                                band_misses=dr.band_misses,
+                                model_version=dr.model_version,
+                                derived_signal=dr.derived_signal))
+                            break
                 else:
                     # newest-first: the forecast for this occurrence was
                     # just appended at the tail, so a long-lived warm
@@ -112,13 +144,14 @@ class Worker:
                                 created_at=fc.created_at, times=fc.times,
                                 values=fc.values,
                                 model_version=fc.model_version,
-                                rank=fc.rank))
+                                rank=fc.rank, lower=fc.lower,
+                                upper=fc.upper))
                             break
         return InvocationResult(
             invocation_id=payload.invocation_id, worker_id=self.worker_id,
             cold_start=cold, started_at=started, finished_at=time.time(),
             outcomes=outcomes, versions=tuple(versions),
-            forecasts=tuple(forecasts))
+            forecasts=tuple(forecasts), detections=tuple(detections))
 
 
 def _process_worker_main(task_q, result_q, factory, worker_id: str,

@@ -53,6 +53,51 @@ def build_steady_castor(kind: str, cls, hp: dict, *, n: int = 6,
     return c
 
 
+MINUTE = 60.0
+
+
+def build_detection_castor(n: int = 3, *, site: str = "D", seed: int = 11,
+                           anomaly_sensor: int = 0, minutes: int = 75,
+                           days: int = 38):
+    """Forecast fleet + minutely live feed + minutely detection fleet —
+    the shared fixture behind tests/test_flows.py and
+    benchmarks/bench_detection.py.
+
+    One LR forecast deployment per prosumer is trained AND scored at
+    FLEET_NOW (so every context has a banded forecast), then minutely
+    readings are ingested over (FLEET_NOW, FLEET_NOW + minutes*MINUTE]:
+    in-band noise around the point forecast for every sensor except
+    ``anomaly_sensor``, which is spiked far outside any plausible band
+    from the window's midpoint on. A ``BandAnomalyDetector`` detection
+    deployment (named ``d-{site}_PRO_0_{i}``) is registered per context,
+    first due FLEET_NOW + MINUTE, firing every minute."""
+    import numpy as np
+    from .core import Schedule
+    from .forecast import LinearForecaster
+    from .forecast.anomaly import BandAnomalyDetector
+    c = build_steady_castor("lr", LinearForecaster, {}, n=n, seed=seed,
+                            site=site, days=days)
+    res = c.tick(FLEET_NOW, executor="fleet")
+    assert res and all(r.ok for r in res), \
+        [r.error for r in res if not r.ok]
+    rng = np.random.default_rng(seed + 1)
+    t = FLEET_NOW + MINUTE * np.arange(1, minutes + 1)
+    for i in range(n):
+        ent = f"{site}_PRO_0_{i}"
+        fc = c.best_forecast("ENERGY_LOAD", ent)
+        v = np.interp(t, fc.times, fc.values) \
+            + rng.normal(0.0, 0.01, t.shape)
+        if i == anomaly_sensor:
+            v = v.copy()
+            v[minutes // 2:] += 25.0
+        c.ingest(c.graph.context("ENERGY_LOAD", ent).ts_id, t, v)
+    c.publish("anom", "1.0", BandAnomalyDetector)
+    c.deploy_detections(package="anom", signal="ENERGY_LOAD",
+                        name_prefix="d", kind="PROSUMER",
+                        detect=Schedule(FLEET_NOW + MINUTE, MINUTE))
+    return c
+
+
 def run_polls(c, k: int, *, executor=None, t0: float = FLEET_NOW,
               step: float = HOUR):
     """Run ``k`` consecutive scheduler polls through ``executor`` (default:
@@ -100,10 +145,35 @@ def snapshot_stores(c) -> dict:
     for name in sorted(getattr(c.predictions, "_by_dep", {})):
         forecasts[name] = tuple(
             (float(fc.created_at), fc.model_version, fc.rank, fc.signal,
-             fc.entity, _canon(fc.times), _canon(fc.values))
+             fc.entity, _canon(fc.times), _canon(fc.values),
+             _canon(fc.lower) if fc.lower is not None else None,
+             _canon(fc.upper) if fc.upper is not None else None)
             for fc in sorted(c.predictions.history(name),
                              key=lambda fc: fc.created_at))
-    return {"versions": versions, "forecasts": forecasts}
+    detections = {}
+    derived = {}
+    det_store = getattr(c, "detections", None)
+    if det_store is not None:
+        for name in sorted(getattr(det_store, "_by_dep", {})):
+            detections[name] = tuple(
+                (float(dr.scheduled_at), dr.score, dr.n_readings,
+                 dr.n_anomalies, dr.band_misses, dr.model_version,
+                 dr.signal, dr.entity, dr.derived_signal)
+                for dr in sorted(det_store.history(name),
+                                 key=lambda dr: dr.scheduled_at))
+            # the derived anomaly series the store wrote back — the
+            # exactly-once surface chaos must not double-append to
+            for dr in det_store.history(name):
+                key = (dr.derived_signal, dr.entity)
+                if key not in derived:
+                    try:
+                        ctx = c.graph.context(*key)
+                    except KeyError:
+                        continue
+                    t, v = c.store.read(ctx.ts_id)
+                    derived[key] = (_canon(t), _canon(v))
+    return {"versions": versions, "forecasts": forecasts,
+            "detections": detections, "derived": derived}
 
 
 def assert_stores_bitwise_equal(c_ref, c_got, *, context: str = "") -> None:
@@ -117,12 +187,13 @@ def assert_stores_bitwise_equal(c_ref, c_got, *, context: str = "") -> None:
         return x if isinstance(x, dict) and "versions" in x \
             else snapshot_stores(x)
     ref, got = _snap(c_ref), _snap(c_got)
-    for kind in ("versions", "forecasts"):
-        assert set(ref[kind]) == set(got[kind]), \
+    for kind in ("versions", "forecasts", "detections"):
+        rk, gk = ref.get(kind, {}), got.get(kind, {})
+        assert set(rk) == set(gk), \
             (f"{context}: {kind} deployment sets differ: "
-             f"{sorted(set(ref[kind]) ^ set(got[kind]))}")
-        for name in ref[kind]:
-            r, g = ref[kind][name], got[kind][name]
+             f"{sorted(set(rk) ^ set(gk))}")
+        for name in rk:
+            r, g = rk[name], gk[name]
             assert len(r) == len(g), \
                 (f"{context}: {name} has {len(g)} {kind}, expected "
                  f"{len(r)} — duplicate or lost effects")
@@ -130,6 +201,14 @@ def assert_stores_bitwise_equal(c_ref, c_got, *, context: str = "") -> None:
                 assert re_ == ge, \
                     (f"{context}: {name} {kind}[{i}] diverges "
                      f"(stamp {ge[0] if ge else '?'} vs {re_[0]})")
+    rd, gd = ref.get("derived", {}), got.get("derived", {})
+    assert set(rd) == set(gd), \
+        (f"{context}: derived-series sets differ: "
+         f"{sorted(set(rd) ^ set(gd))}")
+    for key in rd:
+        assert rd[key] == gd[key], \
+            (f"{context}: derived series {key} diverges — a duplicate "
+             f"detection double-appended, or one was lost")
 
 
 def build_fleet_castor(kind: str, cls, hp: dict, mesh_opt: str, *,

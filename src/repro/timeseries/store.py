@@ -144,6 +144,47 @@ class TimeSeriesStore:
                 self._tier_merge(s)
         return times.size
 
+    def append_points(self, ts_ids: Sequence[str], times, values) -> int:
+        """Batched one-point-per-series append under ONE lock — the
+        detection flow's derived-signal write-back (a minutely bin lands
+        exactly one (t, score) point on every sensor's anomaly series;
+        N ``append()`` calls would pay N lock round-trips and N array
+        coercions for scalar writes)."""
+        t = np.asarray(times, np.float64).ravel()
+        v = np.asarray(values, np.float64).ravel()
+        assert len(ts_ids) == t.size == v.size, (len(ts_ids), t.size, v.size)
+        t_list = t.tolist()                  # python floats: cheap compares
+        # one C-loop view split per column instead of a python slice pair
+        # per point (rows of the (n, 1) reshape are the same 1-element
+        # float64 views t[k:k+1] would produce)
+        rows_t = list(t.reshape(-1, 1))
+        rows_v = list(v.reshape(-1, 1))
+        data_get = self._data.get
+        tail_max = self.tail_max
+        with self._lock:
+            for k, ts_id in enumerate(ts_ids):
+                # get-then-create, not setdefault(_Series()): steady state
+                # always hits, and a throwaway _Series per point is real
+                # money at fleet width
+                s = data_get(ts_id)
+                if s is None:
+                    s = self._data[ts_id] = _Series()
+                s.tail_t.append(rows_t[k])
+                s.tail_v.append(rows_v[k])
+                s.tail_n += 1
+                s.tail_view = None
+                s.count += 1
+                tk = t_list[k]
+                if tk < s.t_min:
+                    s.t_min = tk
+                if tk > s.t_max:
+                    s.t_max = tk
+                if s.tail_n >= tail_max:
+                    self._flush_tail(s)
+                    self._tier_merge(s)
+            self.append_count += t.size
+        return int(t.size)
+
     def _flush_tail(self, s: _Series) -> None:
         """Promote the sorted tail view to a new immutable segment."""
         if not s.tail_n:
@@ -273,26 +314,30 @@ class TimeSeriesStore:
         (late) appends race-free: if ``prior`` moved since the last poll,
         history changed behind the watermark and cached state is stale.
         """
-        if since is not None:
+        fast = since is not None
+        if fast:
             start = since
-        consolidate = since is None
+        consolidate = not fast
+        data_get = self._data.get
         with self._lock:
             self.read_many_count += 1
-            if since is not None:
+            if fast:
                 self.delta_read_count += 1
             out, prior = [], []
             for i in ts_ids:
-                s = self._data.get(i)
-                if since is not None and s is not None and s.count \
+                s = data_get(i)
+                if fast and s is not None and s.count \
                         and len(s.segments) == 1 and not s.tail_n:
                     # steady-state fast path: consolidated series, delta
                     # window — two binary searches, zero-copy views
+                    # (ndarray.searchsorted directly: the np.searchsorted
+                    # dispatch wrapper is measurable at fleet width)
                     seg = s.segments[0]
-                    lo = int(np.searchsorted(seg.times, start))
+                    lo = seg.times.searchsorted(start)
                     hi = seg.n if end is None else \
-                        int(np.searchsorted(seg.times, end))
+                        seg.times.searchsorted(end)
                     if prior_counts:
-                        prior.append(lo)
+                        prior.append(int(lo))
                     out.append((seg.times[lo:hi], seg.values[lo:hi]))
                     continue
                 if prior_counts:
@@ -301,6 +346,58 @@ class TimeSeriesStore:
             if prior_counts:
                 return out, np.asarray(prior, np.int64)
             return out
+
+    def read_many_flat(self, ts_ids: Sequence[str],
+                       start: Optional[float] = None,
+                       end: Optional[float] = None, *,
+                       since: Optional[float] = None
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``read_many`` flattened for vectorized consumers: ONE
+        ``(sizes, times, values)`` triple — per-series windows
+        concatenated in order, ``sizes[i]`` points belonging to
+        ``ts_ids[i]``. Skips the per-series pair materialization that a
+        fleet-width caller would immediately re-concatenate (measurable
+        at minutely detection width). Counts as one ``read_many`` (and
+        one delta read with ``since=``) in telemetry."""
+        fast = since is not None
+        if fast:
+            start = since
+        consolidate = not fast
+        data_get = self._data.get
+        no_end = end is None
+        parts_t: List[np.ndarray] = []
+        parts_v: List[np.ndarray] = []
+        pt_append, pv_append = parts_t.append, parts_v.append
+        sizes_l: List[int] = []
+        sz_append = sizes_l.append
+        with self._lock:
+            self.read_many_count += 1
+            if fast:
+                self.delta_read_count += 1
+            for i in ts_ids:
+                s = data_get(i)
+                if fast and s is not None and s.count \
+                        and len(s.segments) == 1 and not s.tail_n:
+                    seg = s.segments[0]
+                    st = seg.times
+                    lo = st.searchsorted(start)
+                    hi = seg.n if no_end else st.searchsorted(end)
+                    if hi > lo:
+                        sz_append(hi - lo)
+                        pt_append(st[lo:hi])
+                        pv_append(seg.values[lo:hi])
+                    else:
+                        sz_append(0)
+                    continue
+                t, v = self._read_locked(s, start, end, consolidate)
+                sz_append(t.size)
+                if t.size:
+                    pt_append(t)
+                    pv_append(v)
+        sizes = np.asarray(sizes_l, np.int64)
+        if parts_t:
+            return sizes, np.concatenate(parts_t), np.concatenate(parts_v)
+        return sizes, _EMPTY, _EMPTY
 
     def read_window_batch(self, ts_ids: Sequence[str],
                           start: Optional[float] = None,

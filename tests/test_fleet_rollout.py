@@ -61,7 +61,7 @@ def test_device_rollout_matches_numpy_reference(castor, trained, kind):
     device = cls.fleet_score(_instances(castor, cls, hp), trained[kind])
     host = cls.fleet_score(_instances(castor, cls, hp, {"rollout": "host"}),
                            trained[kind])
-    for (dt, dv), (ht, hv) in zip(device, host):
+    for (dt, dv, *_), (ht, hv, *_) in zip(device, host):
         np.testing.assert_allclose(dt, ht)
         np.testing.assert_allclose(dv, hv, rtol=2e-3, atol=1e-3)
 
@@ -73,8 +73,8 @@ def test_fleet_score_matches_single_score(castor, trained, kind):
     cls, hp = MODELS[kind]
     insts = _instances(castor, cls, hp)
     fleet = cls.fleet_score(insts, trained[kind])
-    for inst, mo, (ft, fv) in zip(insts, trained[kind], fleet):
-        st, sv = inst.score(mo)
+    for inst, mo, (ft, fv, *_) in zip(insts, trained[kind], fleet):
+        st, sv = inst.score(mo)[:2]
         np.testing.assert_allclose(ft, st)
         np.testing.assert_allclose(fv, sv, rtol=2e-3, atol=1e-3)
 

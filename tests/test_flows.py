@@ -1,0 +1,358 @@
+"""Flow-typed deployments: prediction intervals end-to-end + the
+minutely anomaly-detection flow (repro.flows, forecast/anomaly.py).
+
+Contracts pinned here:
+
+* every forecaster's q10-q90 band has sane empirical coverage on
+  synthetic data (property test over seeds, all four model kinds);
+* ``Castor.best_forecast(return_bands=True)`` honors ``at=`` replay;
+* detection is replay-faithful: catch-up occurrences score bitwise equal
+  to live minutely polling;
+* the fleet-vectorized detection path (one read_many + one batched
+  band-compare per bin) is bitwise equal to the per-sensor local path;
+* detection runs over serverless — inline, chaos-injected, and real
+  spawned process containers — with the same exactly-once guarantees as
+  forecasting (store snapshots bitwise equal to the fleet run);
+* per-flow deployment counts + detection telemetry in ``Castor.stats``.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import Schedule
+from repro.forecast import (ANNForecaster, GAMForecaster, LSTMForecaster,
+                            LinearForecaster)
+from repro.forecast.anomaly import BandAnomalyDetector
+from repro.serverless import ChaosPolicy, ProcessBackend, ServerlessExecutor
+from repro.serverless.payload import (DetectionBlob, ForecastBlob,
+                                      InvocationPayload, InvocationResult,
+                                      JobRef)
+from repro.testing import (FLEET_NOW as NOW, HOUR, MINUTE,
+                           assert_stores_bitwise_equal,
+                           build_detection_castor, build_steady_castor,
+                           snapshot_stores)
+
+FORECASTERS = {
+    "lr": (LinearForecaster, {}),
+    "gam": (GAMForecaster, {}),
+    "ann": (ANNForecaster, {"hidden": 8, "epochs": 10}),
+    "lstm": (LSTMForecaster, {"hidden": 4, "epochs": 10}),
+}
+TICKS = 45          # minutely detect polls driven per equivalence run
+N = 3
+
+
+def _detect_ticks(c, k, executor="fleet"):
+    for i in range(1, k + 1):
+        res = c.tick(NOW + i * MINUTE, executor=executor)
+        assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+
+
+# ------------------------------------------------- prediction intervals
+@pytest.mark.parametrize("kind", list(FORECASTERS))
+def test_band_coverage_property(kind):
+    """Property: for every forecaster, over drawn data seeds, the q10-q90
+    band's empirical coverage of the ACTUAL future readings is within
+    tolerance — neither degenerate (<50%) nor meaningless (band must
+    have positive width)."""
+    cls, hp = FORECASTERS[kind]
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def prop(seed):
+        c = build_steady_castor(kind, cls, hp, n=2, seed=seed, site="C")
+        res = c.tick(NOW, executor="fleet")
+        assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+        for i in range(2):
+            fc = c.best_forecast("ENERGY_LOAD", f"C_PRO_0_{i}")
+            assert fc.lower is not None and fc.upper is not None
+            assert fc.lower.shape == fc.values.shape == fc.upper.shape
+            width = fc.upper - fc.lower
+            assert np.all(width > 0), "degenerate band"
+            at, av = c.read("ENERGY_LOAD", f"C_PRO_0_{i}",
+                            fc.times[0] - HOUR, fc.times[-1] + HOUR)
+            actual = np.interp(fc.times, at, av)
+            cov = float(np.mean((actual >= fc.lower)
+                                & (actual <= fc.upper)))
+            assert cov >= 0.5, f"{kind} seed={seed}: coverage {cov:.2f}"
+
+    prop()
+
+
+def test_fleet_bands_match_local_bands():
+    """The fleet scoring path derives the SAME residual-quantile bands as
+    per-instance score() — bands ride the local==fleet equivalence."""
+    ca = build_steady_castor("lr", LinearForecaster, {}, n=N)
+    cb = build_steady_castor("lr", LinearForecaster, {}, n=N)
+    assert all(r.ok for r in ca.tick(NOW, executor="fleet"))
+    assert all(r.ok for r in cb.tick(NOW, executor="local"))
+    for i in range(N):
+        fa = ca.predictions.history(f"s-Z_PRO_0_{i}")[-1]
+        fb = cb.predictions.history(f"s-Z_PRO_0_{i}")[-1]
+        np.testing.assert_allclose(fa.lower, fb.lower, rtol=2e-3, atol=1e-3)
+        np.testing.assert_allclose(fa.upper, fb.upper, rtol=2e-3, atol=1e-3)
+
+
+def test_best_forecast_return_bands_with_at_replay():
+    """Satellite regression: ``return_bands=True`` returns (times, values,
+    lower, upper) and honors the existing ``at=`` replay semantics — the
+    band at a past instant is the band a live consumer had then."""
+    c = build_steady_castor("lr", LinearForecaster, {}, n=2)
+    assert all(r.ok for r in c.tick(NOW))
+    assert all(r.ok for r in c.tick(NOW + HOUR))
+    ent = "Z_PRO_0_0"
+    assert len(c.predictions.history("s-" + ent)) == 2
+    t, v, lo, hi = c.best_forecast("ENERGY_LOAD", ent, return_bands=True)
+    latest = c.predictions.latest("ENERGY_LOAD", ent)
+    assert latest.created_at == NOW + HOUR
+    np.testing.assert_array_equal(v, latest.values)
+    np.testing.assert_array_equal(lo, latest.lower)
+    np.testing.assert_array_equal(hi, latest.upper)
+    assert np.all(lo < hi)
+    # at= replays the EARLIER forecast's band, not the latest
+    t0, v0, lo0, hi0 = c.best_forecast("ENERGY_LOAD", ent,
+                                       at=NOW + 30 * MINUTE,
+                                       return_bands=True)
+    first = c.predictions.history("s-" + ent)[0]
+    assert first.created_at == NOW
+    np.testing.assert_array_equal(v0, first.values)
+    np.testing.assert_array_equal(lo0, first.lower)
+    np.testing.assert_array_equal(hi0, first.upper)
+    assert not np.array_equal(lo0, lo)
+    assert c.best_forecast("ENERGY_LOAD", ent, at=NOW - HOUR,
+                           return_bands=True) is None
+
+
+# ------------------------------------------------- detection semantics
+@pytest.fixture(scope="module")
+def detected():
+    """One detection castor driven through TICKS minutely fleet polls —
+    shared by the semantics/stats assertions below (read-only)."""
+    c = build_detection_castor(n=N)
+    _detect_ticks(c, TICKS)
+    return c
+
+
+def test_detection_flags_the_anomalous_sensor(detected):
+    """The spiked sensor's derived anomaly series goes large after the
+    spike; in-band sensors stay at ~0 throughout."""
+    c = detected
+    for i in range(N):
+        recs = c.detections.history(f"d-D_PRO_0_{i}")
+        assert len(recs) == TICKS
+        assert [r.scheduled_at for r in recs] == \
+            [NOW + k * MINUTE for k in range(1, TICKS + 1)]
+    # builder spikes from reading 75//2 (time NOW+38min); each occurrence
+    # scores the half-open window [now-60s, now), so the first spiked
+    # reading lands in the occurrence at NOW+39min
+    spike_from = NOW + (75 // 2 + 2) * MINUTE
+    bad = [r for r in c.detections.history("d-D_PRO_0_0")
+           if r.scheduled_at >= spike_from]
+    assert bad and all(r.score > 1.0 for r in bad), \
+        [(r.scheduled_at, r.score) for r in bad]
+    assert all(r.n_anomalies >= 1 for r in bad)
+    for i in range(1, N):
+        scores = [r.score for r in c.detections.history(f"d-D_PRO_0_{i}")]
+        assert max(scores) < 1.0, max(scores)
+
+
+def test_detection_derived_signal_readable_through_graph(detected):
+    """The anomaly score is a first-class derived signal on the semantic
+    graph: registered once, one point per occurrence, queryable via
+    ``Castor.read`` like any ingested series."""
+    c = detected
+    assert "ENERGY_LOAD.anomaly" in c.graph.signals
+    for i in range(N):
+        t, v = c.read("ENERGY_LOAD.anomaly", f"D_PRO_0_{i}")
+        assert t.size == TICKS
+        recs = c.detections.history(f"d-D_PRO_0_{i}")
+        np.testing.assert_array_equal(t, [r.scheduled_at for r in recs])
+        np.testing.assert_array_equal(v, [r.score for r in recs])
+
+
+def test_detection_telemetry_in_stats(detected):
+    """Satellite: per-flow deployment counts + detection telemetry
+    surface through ``Castor.stats``."""
+    s = detected.stats()
+    assert s["deployments_by_flow"] == {"detection": N, "forecast": N}
+    d = s["detection"]
+    assert d["records"] == N * TICKS
+    assert d["scored_readings"] >= N * (TICKS - 1)
+    assert d["anomalies_flagged"] >= 1
+    # every reading here sits inside the fresh band's horizon
+    assert d["band_misses"] == 0 and d["band_miss_rate"] == 0.0
+
+
+def test_stale_band_counts_misses():
+    """A detection firing past the resolved band's horizon counts its
+    readings as band MISSES (telemetry, not anomalies) — and the miss
+    rate surfaces through stats."""
+    c = build_detection_castor(n=2)
+    # freeze the forecast flow so the NOW band (24h horizon) goes stale
+    for i in range(2):
+        c.undeploy(f"s-D_PRO_0_{i}")
+        c.ingest(c.graph.context("ENERGY_LOAD", f"D_PRO_0_{i}").ts_id,
+                 [NOW + 25 * HOUR + 90.0], [3.0])
+    res = c.tick(NOW + 25 * HOUR + 2 * MINUTE, executor="fleet")
+    detects = [r for r in res if r.job.task == "detect"]
+    assert len(detects) == 2 and all(r.ok for r in detects)
+    d = c.detections.stats()
+    assert d["band_misses"] == 2
+    assert d["anomalies_flagged"] == 0
+    assert 0.0 < d["band_miss_rate"] <= 1.0
+    for i in range(2):
+        rec = c.detections.history(f"d-D_PRO_0_{i}")[-1]
+        assert rec.band_misses == 1 and rec.score == 0.0
+
+
+def test_detection_store_idempotent_and_derived_append_once(detected):
+    """Exactly-once surface: re-saving an already-seen occurrence must
+    neither duplicate the record nor double-append the derived series."""
+    c = detected
+    rec = c.detections.history("d-D_PRO_0_0")[-1]
+    before = snapshot_stores(c)
+    c.detections.save(rec)
+    c.detections.save_many([rec, rec])
+    assert_stores_bitwise_equal(before, c, context="duplicate save")
+
+
+def test_fleet_detection_bitwise_equals_local(detected):
+    """Tentpole acceptance: the fleet-vectorized bin path (one read_many,
+    one batched band-compare) persists detections + derived series
+    bitwise identical to the per-sensor local-pool path."""
+    cb = build_detection_castor(n=N)
+    _detect_ticks(cb, TICKS, executor="local")
+    assert_stores_bitwise_equal(detected, cb, context="fleet vs local")
+
+
+def test_catchup_detection_bitwise_equals_live(detected):
+    """Replay-faithfulness: ONE catch-up poll at the end of the window
+    (scheduler re-fires every missed minutely boundary, each resolving
+    the band via at=scheduled_at) scores bitwise equal to minute-by-
+    minute live polling."""
+    cb = build_detection_castor(n=N)
+    # first poll establishes the watermark (a never-polled deployment
+    # fires once); the second poll catches up every missed boundary
+    assert all(r.ok for r in cb.tick(NOW + MINUTE, executor="fleet"))
+    res = cb.tick(NOW + TICKS * MINUTE, executor="fleet")
+    assert len([r for r in res if r.job.task == "detect"]) \
+        == N * (TICKS - 1)
+    assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+    assert_stores_bitwise_equal(detected, cb, context="live vs catchup")
+
+
+def test_detection_before_any_banded_forecast_fails_alone():
+    """A detect job whose context has no banded forecast yet fails ALONE
+    (at-least-once re-fire), without poisoning sibling detections."""
+    c = build_detection_castor(n=N)
+    # a fresh context with a detection deployment but no forecast flow
+    c.add_entity("D_PRO_9_9", "PROSUMER")
+    ts = "ts::cold"
+    c.ingest(ts, [NOW + MINUTE / 2], [1.0])
+    c.link(ts, "ENERGY_LOAD", "D_PRO_9_9")
+    c.deploy_detections(package="anom", signal="ENERGY_LOAD",
+                        name_prefix="x", kind="PROSUMER",
+                        detect=Schedule(NOW + MINUTE, MINUTE))
+    res = c.tick(NOW + MINUTE, executor="fleet")
+    bad = [r for r in res if not r.ok]
+    assert len(bad) == 1 and "no banded forecast" in bad[0].error
+    assert bad[0].job.deployment_name == "x-D_PRO_9_9"
+    # the d-* fleet AND the banded x-* siblings all detected fine
+    assert sum(r.ok for r in res if r.job.task == "detect") == 2 * N
+
+
+# ------------------------------------------------- serverless parity
+def test_serverless_detection_bitwise_equals_fleet(detected):
+    """Detection bins dispatch over the serverless pipeline (warm
+    workers, action aggregation) with effects bitwise equal to fleet."""
+    cb = build_detection_castor(n=N)
+    _detect_ticks(cb, TICKS, executor="serverless")
+    assert_stores_bitwise_equal(detected, cb, context="fleet vs serverless")
+    cb.close()
+
+
+@pytest.mark.parametrize("fault", ["kill", "duplicate"])
+def test_serverless_detection_chaos_exactly_once(detected, fault):
+    """Exactly-once under chaos, detection flow included: kill-mid-action
+    (partial persisted bins + retry) and duplicate delivery leave the
+    detection store AND the derived anomaly series bitwise identical to
+    the fault-free fleet run — idempotence gates the derived append."""
+    chaos = ChaosPolicy(seed=17, **{"kill_mid_action" if fault == "kill"
+                                    else "duplicate": 1.0})
+    cb = build_detection_castor(n=N)
+    ex = ServerlessExecutor(cb, n_workers=2, chaos=chaos, max_retries=3,
+                            backoff_base_s=0.01, speculative=False)
+    cb._serverless_ex = ex
+    try:
+        _detect_ticks(cb, TICKS, executor="serverless")
+        assert chaos.summary().get(fault, 0) >= 1, chaos.summary()
+        assert_stores_bitwise_equal(detected, cb,
+                                    context=f"chaos {fault}")
+    finally:
+        cb.close()
+
+
+def test_process_backend_detection_matches_fleet(detected):
+    """Real spawned containers: detect jobs ship with their banded
+    forecasts in the payload, workers ship DetectionBlobs back, and the
+    invoker's stores converge bitwise with the fleet run."""
+    factory = functools.partial(build_detection_castor, n=N)
+    c = factory()
+    ex = ServerlessExecutor(c, backend=ProcessBackend(factory, n_workers=1),
+                            speculative=False)
+    c._serverless_ex = ex
+    try:
+        _detect_ticks(c, 3, executor="serverless")
+        ref = build_detection_castor(n=N)
+        _detect_ticks(ref, 3)
+        assert_stores_bitwise_equal(ref, c, context="process vs fleet")
+        assert c.detections.count() == 3 * N
+    finally:
+        c.close()
+
+
+def test_payload_roundtrips_bands_and_detections_bitwise():
+    """JSON wire format: banded-forecast payloads and detection results
+    survive the serialization boundary bitwise."""
+    job = JobRef("d0", "anom", "1.0", "detect", NOW, "ENERGY_LOAD", "E0")
+    fb = ForecastBlob("s0", "ENERGY_LOAD", "E0", NOW,
+                      times=NOW + HOUR * np.arange(1.0, 4.0),
+                      values=np.array([1.0, 2.0, 3.0]),
+                      model_version=2, rank=1,
+                      lower=np.array([0.5, 1.4, 2.2]),
+                      upper=np.array([1.5, 2.6, 3.8]))
+    p = InvocationPayload(invocation_id="inv-1", jobs=(job,), bands=(fb,))
+    q = InvocationPayload.from_json(p.to_json())
+    got = q.bands[0]
+    for f in ("times", "values", "lower", "upper"):
+        a, b = getattr(got, f), getattr(fb, f)
+        assert a.dtype == b.dtype and np.array_equal(a, b)
+    db = DetectionBlob("d0", "ENERGY_LOAD", "E0", NOW + MINUTE,
+                       score=0.125, n_readings=7, n_anomalies=2,
+                       band_misses=1, model_version=2,
+                       derived_signal="ENERGY_LOAD.anomaly")
+    r = InvocationResult(invocation_id="inv-1", worker_id="w0",
+                         cold_start=False, started_at=1.0, finished_at=2.0,
+                         outcomes=(), detections=(db,))
+    assert InvocationResult.from_json(r.to_json()).detections == (db,)
+
+
+def test_fleet_detect_classmethod_bitwise_equals_per_sensor(detected):
+    """Unit-level pin of the vectorized kernel itself: fleet_detect over
+    a bin == N per-sensor detect() calls, field for field."""
+    c = detected
+    at = NOW + 40 * MINUTE
+    insts, bands = [], []
+    for i in range(N):
+        ent = f"D_PRO_0_{i}"
+        fc = c.predictions.latest("ENERGY_LOAD", ent, at=at)
+        bands.append(fc)
+        insts.append(BandAnomalyDetector(
+            context=c.graph.context("ENERGY_LOAD", ent), task="detect",
+            model_id=f"d-{ent}", model_version=None,
+            user_params={"now": at}, system=c))
+    fleet = BandAnomalyDetector.fleet_detect(insts, bands)
+    for inst, fc, fr in zip(insts, bands, fleet):
+        assert inst.detect(fc) == fr
