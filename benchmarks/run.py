@@ -8,7 +8,7 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_control_plane, bench_detection,
+    from . import (bench_control_plane, bench_detection, bench_durability,
                    bench_fig2_ingestion, bench_fig4_transform,
                    bench_kernels, bench_roofline, bench_steady_state,
                    bench_table1_models, bench_table2_sites,
@@ -23,6 +23,7 @@ def main() -> None:
         ("steady", bench_steady_state),
         ("control_plane", bench_control_plane),
         ("detection", bench_detection),
+        ("durability", bench_durability),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

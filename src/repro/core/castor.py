@@ -22,6 +22,7 @@ from .semantics import Context, Entity, SemanticGraph, Signal
 
 class Castor:
     def __init__(self, *, weather_seed: int = 7):
+        self.weather_seed = weather_seed
         self.store = TimeSeriesStore()
         self.graph = SemanticGraph()
         self.registry = ModelRegistry()
@@ -32,6 +33,95 @@ class Castor:
         self.detections = DetectionStore(self.store, self.graph)
         self.weather = WeatherService(seed=weather_seed)
         self.scheduler = ModelScheduler(self.deployments, self.registry)
+        self.journal = None            # durability.Journal when open()'d
+        self._durable_storage = None   # backend owned by open(path=...)
+
+    # ---------------- durability (WAL + recovery) ----------------
+    @classmethod
+    def open(cls, path: Optional[str] = None, *, storage=None,
+             weather_seed: int = 7, fsync: bool = True,
+             snapshot_every: int = 64,
+             max_buffer_bytes: int = 4 << 20,
+             retain_segments: bool = False,
+             pipelined_commit: bool = True) -> "Castor":
+        """Open a DURABLE Castor: recover state from ``path`` (a WAL+
+        snapshot directory; created empty if absent) or any
+        ``StorageBackend`` via ``storage=``, then journal every
+        system-of-record mutation from here on. Records group-commit as
+        one fsync'd segment per ``tick`` (plus a ``max_buffer_bytes``
+        overflow flush), and every ``snapshot_every`` commits the log
+        compacts into a full-state snapshot.
+
+        Recovery replays snapshot-then-WAL into bitwise-equal stores and
+        re-arms the calendar queue; a torn/corrupt WAL tail (crash
+        mid-write) is dropped at the first bad checksum, and the
+        boundary-stamped catch-up machinery re-fires anything the lost
+        suffix contained. Model *implementations* are code, not data —
+        re-``publish`` packages after opening, then ``deploy_for_all``/
+        ``tick`` as usual.
+
+        ``pipelined_commit`` (default on) hands each segment put to a
+        writer thread so tick k's fsync overlaps tick k+1's compute; at
+        most one write is ever in flight and segments land in order, so
+        a crash still loses only a suffix of recent work. ``close()``
+        (and ``Journal.barrier()``) block until the last write lands."""
+        from ..durability.journal import (Journal, load_records, meta_of,
+                                          replay_records)
+        owned = None
+        if storage is None:
+            if path is None:
+                raise ValueError("Castor.open needs a path or a storage=")
+            from ..serverless.storage import FilesystemStorage
+            storage = owned = FilesystemStorage(root=path, fsync=fsync)
+        records, rec_stats = load_records(storage)
+        meta = meta_of(records)
+        if meta is not None:
+            weather_seed = int(meta.get("weather_seed", weather_seed))
+        c = cls(weather_seed=weather_seed)
+        replay_records(c, records)     # journal-less: replay re-journals
+        journal = Journal(storage, castor=c,          # nothing
+                          snapshot_every=snapshot_every,
+                          max_buffer_bytes=max_buffer_bytes,
+                          retain_segments=retain_segments,
+                          pipelined=pipelined_commit)
+        journal.start_at(rec_stats["next_seq"])
+        c._recovery_stats = rec_stats
+        c._durable_storage = owned
+        c._attach_journal(journal)
+        if meta is None:               # first open: persist the seed
+            journal.append("meta", {"format": 1,
+                                    "weather_seed": weather_seed})
+        return c
+
+    def _attach_journal(self, journal) -> None:
+        """Point every system of record at the journal. Hooks fire inside
+        the stores' own locks; the journal's lock nests strictly inside
+        and never calls back out, so lock order is acyclic."""
+        self.journal = journal
+        for store in (self.store, self.versions, self.predictions,
+                      self.detections, self.deployments, self.graph):
+            store.journal = journal
+
+    def _detach_journal(self) -> None:
+        self.journal = None
+        for store in (self.store, self.versions, self.predictions,
+                      self.detections, self.deployments, self.graph):
+            store.journal = None
+
+    def _commit_tick(self) -> None:
+        """Group-commit one tick's records: the scheduler's watermark/
+        retry delta journals as ONE atomic record AFTER the tick's
+        effects (so a torn tail can only under-report progress, never
+        drop effects a watermark already covers), then the whole buffer
+        flushes as one segment — one storage put / fsync per tick, not
+        per record."""
+        j = self.journal
+        if j is None:
+            return
+        delta = self.scheduler.drain_dirty()
+        if delta is not None:
+            j.append("sched", delta)
+        j.commit()
 
     # ---------------- (1)/(2) data + semantics ----------------
     def ingest(self, ts_id: str, times, values) -> int:
@@ -86,6 +176,7 @@ class Castor:
         paper-faithful stateless pool, built per call)."""
         jobs = self.scheduler.poll(now)
         if not jobs:
+            self._commit_tick()        # flush buffered ingest records too
             return []
         if executor == "fleet":
             ex = self.fleet_executor(max_parallel=max_parallel)
@@ -97,7 +188,13 @@ class Castor:
         else:
             raise ValueError(f"unknown executor {executor!r} "
                              "(expected fleet | serverless | local)")
-        return ex.run(jobs)
+        try:
+            return ex.run(jobs)
+        finally:
+            # the group-commit point: effects first, then the scheduler
+            # delta, one segment put — even when the executor raised (any
+            # persisted effects plus ``mark_failed`` retry stamps)
+            self._commit_tick()
 
     def fleet_executor(self, *, max_parallel: int = 16) -> FleetExecutor:
         """The system's long-lived fleet executor (steady-state runtime
@@ -197,12 +294,32 @@ class Castor:
             # plus elastic-pool / chaos / storage sub-summaries when the
             # executor was built with those features
             out["serverless"] = sv.stats()
+        if self.journal is not None:
+            # WAL telemetry: records/segments/snapshots written, bytes,
+            # group-commit overflow flushes (durability/journal.py)
+            out["durability"] = self.journal.stats()
         return out
 
     def close(self) -> None:
-        """Release long-lived execution resources: the cached serverless
+        """Release long-lived execution resources: flush+close the
+        durability journal (any buffered WAL records and the scheduler's
+        undrained delta fsync BEFORE the storage backend — possibly an
+        owned tempdir — is released), then the cached serverless
         executor's backend (spawned worker processes, owned storage
-        buckets). Idempotent; the in-memory stores stay usable."""
+        buckets). Idempotent: double-close and ``__exit__`` after an
+        explicit ``close()`` are no-ops; the in-memory stores stay
+        usable."""
+        j = getattr(self, "journal", None)
+        if j is not None:
+            delta = self.scheduler.drain_dirty()
+            if delta is not None:
+                j.append("sched", delta)
+            j.close()
+            self._detach_journal()     # journal=None: re-close is a no-op
+        owned = getattr(self, "_durable_storage", None)
+        if owned is not None:
+            self._durable_storage = None
+            owned.close()
         sv = getattr(self, "_serverless_ex", None)
         if sv is not None:
             self._serverless_ex = None

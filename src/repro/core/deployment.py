@@ -42,6 +42,45 @@ class ModelDeployment:
         return (self.signal, self.entity)
 
 
+def _schedule_record(s: Optional[Schedule]):
+    return None if s is None else [s.start, s.every]
+
+
+def _schedule_from(v) -> Optional[Schedule]:
+    return None if v is None else Schedule(float(v[0]), float(v[1]))
+
+
+def deployment_record(dep: ModelDeployment) -> Dict:
+    """WAL/snapshot payload for one deployment. ``cls`` discriminates the
+    dataclass to rebuild (``DetectionDeployment`` subclasses add nothing
+    beyond a different flow default, but keep the type round-trip exact)."""
+    return {"cls": type(dep).__name__, "name": dep.name,
+            "package": dep.package, "model_class": dep.model_class,
+            "version": dep.version, "signal": dep.signal,
+            "entity": dep.entity, "train": _schedule_record(dep.train),
+            "score": _schedule_record(dep.score),
+            "detect": _schedule_record(dep.detect),
+            "user_params": dep.user_params, "rank": dep.rank,
+            "flow": dep.flow}
+
+
+def deployment_from_record(d: Dict) -> ModelDeployment:
+    cls = ModelDeployment
+    if d.get("cls") == "DetectionDeployment":
+        from ..flows.detection import DetectionDeployment
+        cls = DetectionDeployment
+    return cls(
+        name=d["name"], package=d["package"],
+        model_class=d.get("model_class", ""), version=d.get("version"),
+        signal=d.get("signal", ""), entity=d.get("entity", ""),
+        train=_schedule_from(d.get("train")),
+        score=_schedule_from(d.get("score")),
+        detect=_schedule_from(d.get("detect")),
+        user_params=dict(d.get("user_params") or {}),
+        rank=int(d.get("rank", 0)),
+        flow=d.get("flow", "forecast"))
+
+
 class DeploymentStore:
     """Indexed deployment registry: by name, by context ``(signal,
     entity)`` and by package, with a monotonically increasing
@@ -60,6 +99,7 @@ class DeploymentStore:
         self._by_flow: Dict[str, Dict[str, ModelDeployment]] = {}
         self._revision = 0
         self._listeners: List = []
+        self.journal = None           # durability.Journal when Castor.open'd
 
     @property
     def revision(self) -> int:
@@ -85,6 +125,9 @@ class DeploymentStore:
             getattr(dep, "flow", "forecast"), {})[dep.name] = dep
         self._sorted = None
         self._revision += 1
+        j = self.journal
+        if j is not None:
+            j.append("dep", deployment_record(dep))
         for sub in self._listeners:
             sub.on_register(dep)
         return dep
@@ -103,6 +146,9 @@ class DeploymentStore:
                     del index[key]
         self._sorted = None
         self._revision += 1
+        j = self.journal
+        if j is not None:
+            j.append("rmdep", {"name": name})
         for sub in self._listeners:
             sub.on_remove(name)
 

@@ -33,6 +33,7 @@ class ModelVersionStore:
         self._versions: Dict[str, List[ModelVersion]] = {}
         self._latest: Dict[str, ModelVersion] = {}   # max trained_at memo
         self._lock = threading.Lock()
+        self.journal = None           # durability.Journal when Castor.open'd
 
     def save(self, model_id: str, params, trained_at: float,
              metadata: Optional[dict] = None) -> ModelVersion:
@@ -48,6 +49,11 @@ class ModelVersionStore:
             if cur is None or (mv.trained_at, mv.version) > \
                     (cur.trained_at, cur.version):
                 self._latest[model_id] = mv
+            j = self.journal
+            if j is not None:         # fresh insert only: replay re-derives
+                j.append("mv", {"model_id": model_id,      # the numbering
+                                "trained_at": trained_at, "params": params,
+                                "metadata": mv.metadata})
             return mv
 
     def get(self, model_id: str, version: Optional[int] = None, *,
@@ -83,6 +89,9 @@ class ModelVersionStore:
     def count(self) -> int:
         return sum(len(v) for v in self._versions.values())
 
+    def model_ids(self) -> List[str]:
+        return sorted(self._versions)
+
 
 @dataclass(frozen=True)
 class Forecast:
@@ -99,6 +108,84 @@ class Forecast:
     # compares live readings against these.
     lower: Optional[np.ndarray] = None
     upper: Optional[np.ndarray] = None
+
+
+def forecast_record(fc: Forecast) -> Dict[str, Any]:
+    """WAL/snapshot payload for one forecast (arrays pass bitwise through
+    the codec; ``lower``/``upper`` may be None)."""
+    return {"deployment_name": fc.deployment_name, "signal": fc.signal,
+            "entity": fc.entity, "created_at": fc.created_at,
+            "times": fc.times, "values": fc.values,
+            "model_version": fc.model_version, "rank": fc.rank,
+            "lower": fc.lower, "upper": fc.upper}
+
+
+def forecast_from_record(d: Dict[str, Any]) -> Forecast:
+    low, up = d.get("lower"), d.get("upper")
+    return Forecast(
+        deployment_name=d["deployment_name"], signal=d["signal"],
+        entity=d["entity"], created_at=float(d["created_at"]),
+        times=np.asarray(d["times"]), values=np.asarray(d["values"]),
+        model_version=int(d["model_version"]), rank=int(d.get("rank", 0)),
+        lower=None if low is None else np.asarray(low),
+        upper=None if up is None else np.asarray(up))
+
+
+def forecast_batch_record(fcs: List["Forecast"]) -> Dict[str, Any]:
+    """One WAL/snapshot payload for a whole batch of forecasts.
+
+    A uniform batch (every forecast the same horizon length and dtype,
+    all banded or all bandless — the shape every fleet bin produces)
+    stacks into four ``(n, h)`` arrays, so the codec encodes 4 large
+    blobs instead of ``4n`` small ones; that keeps the per-tick WAL
+    append off the warm-poll critical path (``bench_durability`` gate
+    (b)). Rows of the stack are bitwise the original arrays. Mixed
+    batches fall back to the per-forecast ``{"forecasts": [...]}`` list
+    — ``forecasts_from_batch`` replays either format."""
+    def _sig(fc):
+        band = fc.lower is not None and fc.upper is not None
+        if not (isinstance(fc.times, np.ndarray)
+                and isinstance(fc.values, np.ndarray)):
+            return None
+        return (fc.times.shape, fc.times.dtype, fc.values.shape,
+                fc.values.dtype, band,
+                None if not band else (fc.lower.shape, fc.lower.dtype,
+                                       fc.upper.shape, fc.upper.dtype))
+    first = _sig(fcs[0]) if fcs else None
+    if first is None or any(_sig(fc) != first for fc in fcs):
+        return {"forecasts": [forecast_record(fc) for fc in fcs]}
+    banded = fcs[0].lower is not None and fcs[0].upper is not None
+    times = np.stack([fc.times for fc in fcs])
+    if bool((times == times[0]).all()):
+        times = times[0]       # one shared horizon grid (the fleet-bin
+    return {"meta": [[fc.deployment_name,  # case: same boundary, same
+                      fc.signal, fc.entity,  # grid for every sensor)
+                      fc.created_at, fc.model_version, fc.rank]
+                     for fc in fcs],
+            "times": times,
+            "values": np.stack([fc.values for fc in fcs]),
+            "lower": np.stack([fc.lower for fc in fcs]) if banded else None,
+            "upper": np.stack([fc.upper for fc in fcs]) if banded else None}
+
+
+def forecasts_from_batch(d: Dict[str, Any]) -> List[Forecast]:
+    if "forecasts" in d:
+        return [forecast_from_record(f) for f in d["forecasts"]]
+    times = np.asarray(d["times"])
+    values = np.asarray(d["values"])
+    shared = times.ndim == values.ndim - 1   # deduped horizon grid
+    low, up = d.get("lower"), d.get("upper")
+    low = None if low is None else np.asarray(low)
+    up = None if up is None else np.asarray(up)
+    return [Forecast(deployment_name=dep, signal=sig, entity=ent,
+                     created_at=float(created),
+                     times=times if shared else times[i],
+                     values=values[i], model_version=int(ver),
+                     rank=int(rank),
+                     lower=None if low is None else low[i],
+                     upper=None if up is None else up[i])
+            for i, (dep, sig, ent, created, ver, rank)
+            in enumerate(d["meta"])]
 
 
 class PredictionStore:
@@ -125,34 +212,46 @@ class PredictionStore:
         # admit (see FleetExecutor's detect band cache)
         self.mutations = 0
         self.max_created = -float("inf")
+        self.journal = None           # durability.Journal when Castor.open'd
 
     def save(self, fc: Forecast) -> Forecast:
         with self._lock:
-            self._save_locked(fc)
+            if self._save_locked(fc):
+                self._journal_locked([fc])
         return fc
 
     def save_many(self, fcs: List[Forecast]) -> None:
         """One lock acquisition for a whole fleet bin's forecasts — the
         scoring analogue of ``TimeSeriesStore.read_many`` (N per-forecast
-        lock round-trips were measurable at steady state)."""
+        lock round-trips were measurable at steady state). Journals the
+        bin's fresh forecasts as ONE atomic record."""
         with self._lock:
-            for fc in fcs:
-                self._save_locked(fc)
+            fresh = [fc for fc in fcs if self._save_locked(fc)]
+            self._journal_locked(fresh)
 
-    def _save_locked(self, fc: Forecast) -> None:
+    def _journal_locked(self, fresh: List[Forecast]) -> None:
+        j = self.journal
+        if j is not None and fresh:
+            j.append("fc", forecast_batch_record(fresh))
+
+    def _save_locked(self, fc: Forecast) -> bool:
         key = (fc.deployment_name, float(fc.created_at))
         if key in self._seen:                        # duplicate execution
-            return
+            return False
         self._seen.add(key)
         self._by_dep.setdefault(fc.deployment_name, []).append(fc)
         self._by_ctx.setdefault((fc.signal, fc.entity), []).append(fc)
         self.mutations += 1
         if fc.created_at > self.max_created:
             self.max_created = float(fc.created_at)
+        return True
 
     def history(self, deployment_name: str) -> List[Forecast]:
         """Full lineage — every rolling-horizon forecast ever produced."""
         return list(self._by_dep.get(deployment_name, ()))
+
+    def deployment_names(self) -> List[str]:
+        return sorted(self._by_dep)
 
     def for_context(self, signal: str, entity: str) -> List[Forecast]:
         return list(self._by_ctx.get((signal, entity), ()))

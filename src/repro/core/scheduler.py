@@ -175,6 +175,10 @@ class ModelScheduler:
         self._failed: Dict[Tuple[str, str], set] = {}   # scheduled_at stamps
         self._heap: List[Tuple[float, int, str, str]] = []
         self._gen: Dict[str, int] = {}      # name -> live entry generation
+        # (name, task) keys whose watermark/retry state changed since the
+        # last drain — what the durability journal persists per tick as
+        # ONE atomic "sched" record (see drain_dirty)
+        self._dirty: set = set()
         # params-key memo per user_params dict identity: repr-ing every
         # deployment's params dict on every poll was measurable on the
         # steady-state hot path. The memo holds a snapshot COPY and
@@ -210,6 +214,7 @@ class ModelScheduler:
         for task in TASKS:
             self._last.pop((name, task), None)
             self._failed.pop((name, task), None)
+            self._dirty.discard((name, task))   # "rmdep" subsumes the delta
 
     def _push(self, due: float, name: str, task: str) -> None:
         heapq.heappush(self._heap,
@@ -281,7 +286,8 @@ class ModelScheduler:
             raise
         # every lookup succeeded: commit state, re-arm wake-ups, and emit
         for dep, task, key, sched, stamps, advance, version in planned:
-            self._failed.pop(key, None)
+            if self._failed.pop(key, None) is not None or advance:
+                self._dirty.add(key)
             if advance:
                 self._last[key] = now
             self._push(sched.next_boundary_after(now), dep.name, task)
@@ -313,9 +319,52 @@ class ModelScheduler:
         exactly the state ``on_remove`` exists to clear."""
         if job.deployment_name not in self.deployments:
             return
-        self._failed.setdefault((job.deployment_name, job.task),
-                                set()).add(job.scheduled_at)
+        key = (job.deployment_name, job.task)
+        self._failed.setdefault(key, set()).add(job.scheduled_at)
+        self._dirty.add(key)
         self._push(job.scheduled_at, job.deployment_name, job.task)
+
+    # ---------------------- durability surface --------------------------
+    def _state_entry(self, key: Tuple[str, str]) -> list:
+        name, task = key
+        wm = self._last.get(key)
+        return [name, task, wm, sorted(self._failed.get(key, ()))]
+
+    def drain_dirty(self) -> Optional[dict]:
+        """The watermark/retry delta since the last drain, as one
+        journal-record payload — or None when nothing changed. Appended
+        by ``Castor.tick`` AFTER the tick's effect records, so a torn WAL
+        tail can only leave "effects persisted, watermark behind": the
+        whole boundary then re-fires on recovery and the idempotent
+        stores absorb the duplicated prefix. An entry's stamp list
+        replaces the key's retry set wholesale (empty = cleared)."""
+        if not self._dirty:
+            return None
+        entries = [self._state_entry(k) for k in sorted(self._dirty)]
+        self._dirty.clear()
+        return {"keys": entries}
+
+    def dump_state(self) -> dict:
+        """Full watermark/retry state (snapshot records)."""
+        keys = sorted(set(self._last) | set(self._failed))
+        return {"keys": [self._state_entry(k) for k in keys]}
+
+    def restore_state(self, d: dict) -> None:
+        """Apply a "sched" record: per-key wholesale replacement. Retry
+        stamps are re-armed on the heap so the next poll re-fires them,
+        exactly as ``mark_failed`` would have."""
+        for name, task, wm, stamps in d.get("keys", ()):
+            key = (name, task)
+            if wm is None:
+                self._last.pop(key, None)
+            else:
+                self._last[key] = float(wm)
+            if stamps:
+                self._failed[key] = {float(s) for s in stamps}
+                for s in stamps:
+                    self._push(float(s), name, task)
+            else:
+                self._failed.pop(key, None)
 
     def stats(self) -> dict:
         return {"heap_entries": len(self._heap),

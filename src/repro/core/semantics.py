@@ -76,6 +76,7 @@ class SemanticGraph:
         self._sig_ents: Dict[int, Set[int]] = {}       # signal id -> entity ids
         self._kind_ents: Dict[str, Set[int]] = {}      # kind -> entity ids
         self._desc_memo: Dict[int, List[str]] = {}     # root id -> desc names
+        self.journal = None           # durability.Journal when Castor.open'd
 
     # ---------------- int handles ----------------
     def entity_id(self, name: str) -> int:
@@ -93,8 +94,13 @@ class SemanticGraph:
 
     # ---------------- concept definition ----------------
     def add_signal(self, sig: Signal) -> Signal:
+        changed = self.signals.get(sig.name) != sig
         self.signals[sig.name] = sig
         self._sig_ids.intern(sig.name)
+        j = self.journal
+        if j is not None and changed:      # idempotent re-adds stay silent
+            j.append("sig", {"name": sig.name, "unit": sig.unit,
+                             "description": sig.description})
         return sig
 
     def add_entity(self, ent: Entity, parent: Optional[str] = None) -> Entity:
@@ -104,15 +110,23 @@ class SemanticGraph:
             self._kind_ents.get(prev.kind, set()).discard(eid)
         self.entities[ent.name] = ent
         self._kind_ents.setdefault(ent.kind, set()).add(eid)
+        changed = prev != ent
         if parent is not None:
             assert parent in self.entities, f"unknown parent {parent}"
             pid = self._ent_ids.intern(parent)
+            if self._parents.get(eid) != pid:
+                changed = True
             siblings = self._children.setdefault(pid, [])
             if eid not in siblings:
                 siblings.append(eid)
                 self._invalidate_descendants(pid)
             self._parents[eid] = pid
             self._all_parents.setdefault(eid, set()).add(pid)
+        j = self.journal
+        if j is not None and changed:      # idempotent re-adds stay silent
+            j.append("ent", {"name": ent.name, "kind": ent.kind,
+                             "lat": ent.lat, "lon": ent.lon,
+                             "parent": parent})
         return ent
 
     def _invalidate_descendants(self, pid: int) -> None:
@@ -141,7 +155,15 @@ class SemanticGraph:
         """Attach semantics to an ingested series (paper step (2))."""
         assert signal in self.signals, f"unknown signal {signal}"
         assert entity in self.entities, f"unknown entity {entity}"
+        changed = self._ts.get((signal, entity)) != ts_id
         self._link(signal, entity, ts_id)
+        j = self.journal
+        if j is not None and changed:
+            # explicit links only: the ``context()`` auto-created
+            # ``ts::{signal}::{entity}`` node is deterministic and
+            # regenerates identically on first touch after recovery
+            j.append("lnk", {"ts_id": ts_id, "signal": signal,
+                             "entity": entity})
         return self.context(signal, entity)
 
     # ---------------- queries (semantic reasoning) ----------------

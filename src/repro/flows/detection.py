@@ -22,7 +22,8 @@ double-append.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass
+from contextlib import nullcontext
+from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional
 
 from ..core.deployment import DeploymentStore, ModelDeployment
@@ -74,21 +75,35 @@ class DetectionStore:
         self.scored_readings = 0
         self.anomalies_flagged = 0
         self.band_misses = 0
+        self.journal = None           # durability.Journal when Castor.open'd
 
     def save(self, rec: DetectionRecord) -> DetectionRecord:
         self.save_many([rec])
         return rec
 
-    def save_many(self, recs: List[DetectionRecord]) -> None:
+    def save_many(self, recs: List[DetectionRecord],
+                  write_back: bool = True) -> None:
         """One lock acquisition AND one batched derived-signal append per
         fleet bin (mirrors ``PredictionStore.save_many``; per-record
         ``store.append`` round-trips dominated the minutely bin before
-        batching)."""
+        batching).
+
+        Durability: the bin's fresh records journal as ONE atomic "det"
+        record that SUBSUMES the derived-signal write-back — the inner
+        ``append_points`` is journal-suppressed, because a torn WAL tail
+        splitting a detection from its derived points (in either order)
+        would diverge from any state a live run passes through. WAL
+        replay re-runs ``save_many(write_back=True)``; snapshot replay
+        passes ``write_back=False`` (the snapshotted series already hold
+        every derived point)."""
         seen = self._seen
         by_dep_setdefault = self._by_dep.setdefault
         ts_ids_get = self._ts_ids.get
-        write_back = self._store is not None and self._graph is not None
+        fresh: List[DetectionRecord] = []
+        write_back = write_back and self._store is not None \
+            and self._graph is not None
         readings = anomalies = misses = 0
+        j = self.journal
         with self._lock:
             ids: List[str] = []
             ts: List[float] = []
@@ -102,6 +117,7 @@ class DetectionStore:
                 if len(seen) == n_seen:              # duplicate execution
                     continue
                 n_seen += 1
+                fresh.append(rec)
                 by_dep_setdefault(rec.deployment_name, []).append(rec)
                 readings += rec.n_readings
                 anomalies += rec.n_anomalies
@@ -129,10 +145,17 @@ class DetectionStore:
             self.anomalies_flagged += anomalies
             self.band_misses += misses
             if ids:
-                self._store.append_points(ids, ts, vs)
+                with j.suppressed() if j is not None else nullcontext():
+                    self._store.append_points(ids, ts, vs)
+            if j is not None and fresh:
+                j.append("det", {"records": [asdict(r) for r in fresh],
+                                 "wb": write_back})
 
     def history(self, deployment_name: str) -> List[DetectionRecord]:
         return list(self._by_dep.get(deployment_name, ()))
+
+    def deployment_names(self) -> List[str]:
+        return sorted(self._by_dep)
 
     def count(self) -> int:
         return sum(len(v) for v in self._by_dep.values())

@@ -161,11 +161,16 @@ class FilesystemStorage(StorageBackend):
     sees the complete object, never a torn one. ``owned`` roots (the
     default when ``root`` is omitted: a fresh tempdir) are deleted on
     ``close()``.
+
+    ``fsync=True`` (what ``Castor.open`` uses for its WAL) additionally
+    fsyncs the temp file before the rename and the directory after it,
+    so a completed ``put`` survives power loss, not just process death.
     """
 
-    def __init__(self, root: Optional[str] = None):
+    def __init__(self, root: Optional[str] = None, *, fsync: bool = False):
         self._owned = root is None
         self.root = root or tempfile.mkdtemp(prefix="repro-objstore-")
+        self.fsync = fsync
         os.makedirs(self.root, exist_ok=True)
         self._counters = _Counters()
 
@@ -180,7 +185,16 @@ class FilesystemStorage(StorageBackend):
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(data)
+                if self.fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
             os.replace(tmp, path)          # atomic publish
+            if self.fsync:                 # persist the rename itself
+                dfd = os.open(os.path.dirname(path), os.O_RDONLY)
+                try:
+                    os.fsync(dfd)
+                finally:
+                    os.close(dfd)
         except BaseException:
             try:
                 os.unlink(tmp)
@@ -200,8 +214,13 @@ class FilesystemStorage(StorageBackend):
 
     def list(self, prefix: str = "") -> List[str]:
         out = []
-        for dirpath, _dirs, files in os.walk(self.root):
-            for name in files:
+        for dirpath, dirs, files in os.walk(self.root):
+            # os.walk surfaces entries in os.listdir order, which is
+            # filesystem-dependent; sort the traversal itself so the
+            # result is deterministic on every platform even before the
+            # final sort (and any future early-exit iteration stays so)
+            dirs.sort()
+            for name in sorted(files):
                 if name.startswith(".tmp-"):
                     continue               # in-flight atomic put
                 key = os.path.relpath(os.path.join(dirpath, name),

@@ -211,6 +211,143 @@ def assert_stores_bitwise_equal(c_ref, c_got, *, context: str = "") -> None:
              f"detection double-appended, or one was lost")
 
 
+# ------------------------------------------------------------ durability
+#
+# Crash-restart harness: a *plan* is a castor-independent description of
+# a workload — semantics, the full external feed, publish/deploy rules,
+# and the poll boundaries — captured once from a scratch build. The
+# fault-free reference and every recovered castor execute the SAME
+# ``drive_plan``, so bitwise comparison isolates exactly what the
+# WAL/recovery machinery did. The feed re-sends with at-least-once
+# semantics (``replay_feed`` filters by each series' recovered
+# ``last_time``): external data cannot be regenerated from a journal, so
+# a real deployment's producers would replay it the same way.
+
+
+def _graph_plan(g):
+    signals = [(s.name, s.unit, s.description) for s in g.signals.values()]
+    entities = []
+    for name, ent in g.entities.items():      # insertion order: parents
+        p = g.parent(name)                    # precede their children
+        entities.append((ent.name, ent.kind, ent.lat, ent.lon,
+                         p.name if p is not None else None))
+    links = sorted((tid, s, e) for (s, e), tid in g._ts.items())
+    return signals, entities, links
+
+
+def steady_plan(kind: str, cls, hp: dict, *, n: int = 4, seed: int = 9,
+                site: str = "Z", polls: int = 3,
+                train_every: float = DAY, score_every: float = HOUR,
+                days: int = 38, window_days: int = 14) -> dict:
+    """Capture a steady-state forecast workload (the
+    ``build_steady_castor`` fleet, dailies training + hourly scoring) as
+    a replayable plan with ``polls`` hourly boundaries from FLEET_NOW."""
+    from .core import Schedule
+    scratch = build_steady_castor(kind, cls, hp, n=n, seed=seed, site=site,
+                                  train_every=train_every,
+                                  score_every=score_every, days=days,
+                                  window_days=window_days)
+    signals, entities, links = _graph_plan(scratch.graph)
+    feed = {tid: scratch.store.read(tid) for tid in scratch.store.ids()}
+    return {
+        "signals": signals, "entities": entities, "links": links,
+        "feed": feed,
+        "publish": [(kind, "1.0", cls)],
+        "deploy": [("forecast", dict(
+            package=kind, signal="ENERGY_LOAD", name_prefix="s",
+            kind="PROSUMER", train=Schedule(FLEET_NOW, train_every),
+            score=Schedule(FLEET_NOW, score_every),
+            user_params={"train_window_days": window_days, **hp}))],
+        "boundaries": [FLEET_NOW + k * score_every for k in range(polls)],
+    }
+
+
+def detection_plan(n: int = 3, *, site: str = "D", seed: int = 11,
+                   anomaly_sensor: int = 0, minutes: int = 40,
+                   days: int = 38) -> dict:
+    """Capture the minutely detection workload
+    (``build_detection_castor``: banded LR fleet at FLEET_NOW, minutely
+    spiked feed, a BandAnomalyDetector per context) as a replayable plan:
+    one FLEET_NOW train+score boundary, then ``minutes`` minutely detect
+    boundaries. The minutely readings — a function of the (deterministic)
+    FLEET_NOW forecast — are captured as static numbers, so the plan's
+    feed is closed under replay."""
+    from .core import Schedule
+    from .forecast import LinearForecaster
+    from .forecast.anomaly import BandAnomalyDetector
+    scratch = build_detection_castor(n=n, site=site, seed=seed,
+                                     anomaly_sensor=anomaly_sensor,
+                                     minutes=minutes, days=days)
+    signals, entities, links = _graph_plan(scratch.graph)
+    feed = {tid: scratch.store.read(tid) for tid in scratch.store.ids()}
+    return {
+        "signals": signals, "entities": entities, "links": links,
+        "feed": feed,
+        "publish": [("lr", "1.0", LinearForecaster),
+                    ("anom", "1.0", BandAnomalyDetector)],
+        "deploy": [
+            ("forecast", dict(
+                package="lr", signal="ENERGY_LOAD", name_prefix="s",
+                kind="PROSUMER", train=Schedule(FLEET_NOW, 1e12),
+                score=Schedule(FLEET_NOW, HOUR),
+                user_params={"train_window_days": 14})),
+            ("detection", dict(
+                package="anom", signal="ENERGY_LOAD", name_prefix="d",
+                kind="PROSUMER",
+                detect=Schedule(FLEET_NOW + MINUTE, MINUTE))),
+        ],
+        "boundaries": [FLEET_NOW] + [FLEET_NOW + k * MINUTE
+                                     for k in range(1, minutes + 1)],
+    }
+
+
+def replay_feed(c, feed) -> int:
+    """At-least-once re-ingestion: append only the points past each
+    series' recovered ``last_time`` (feeds are time-sorted, so the suffix
+    mask is exact; on a fresh castor the whole feed lands). Returns the
+    number of points appended."""
+    import numpy as np
+    total = 0
+    for tid in sorted(feed):
+        t, v = feed[tid]
+        last = c.store.last_time(tid)
+        if last is not None:
+            keep = np.asarray(t) > last
+            t, v = np.asarray(t)[keep], np.asarray(v)[keep]
+        if len(t):
+            total += c.ingest(tid, t, v)
+    return total
+
+
+def drive_plan(c, plan, *, executor: str = "fleet",
+               boundaries=None) -> None:
+    """Execute a plan on a castor — fresh OR recovered. Every step is
+    idempotent against already-recovered state: semantics re-adds are
+    no-ops, the feed replays only its missing suffix, implementations
+    re-publish (the registry holds code, which a journal never persists),
+    deploy rules skip registered contexts, and boundary ticks re-fire
+    only occurrences the recovered watermarks don't already cover."""
+    from .core import Signal
+    for name, unit, desc in plan["signals"]:
+        c.graph.add_signal(Signal(name, unit, desc))
+    for name, kind, lat, lon, parent in plan["entities"]:
+        c.add_entity(name, kind, lat, lon, parent=parent)
+    for tid, sig, ent in plan["links"]:
+        c.link(tid, sig, ent)
+    replay_feed(c, plan["feed"])
+    for package, version, cls in plan["publish"]:
+        c.publish(package, version, cls)
+    for flow, rule in plan["deploy"]:
+        if flow == "detection":
+            c.deploy_detections(**rule)
+        else:
+            c.deploy_for_all(**rule)
+    for t in boundaries if boundaries is not None else plan["boundaries"]:
+        res = c.tick(t, executor=executor)
+        bad = [r.error for r in res if not r.ok]
+        assert not bad, bad
+
+
 def build_fleet_castor(kind: str, cls, hp: dict, mesh_opt: str, *,
                        n: int = 6, seed: int = 9, site: str = "Z",
                        run: bool = True):

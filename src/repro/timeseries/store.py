@@ -121,6 +121,7 @@ class TimeSeriesStore:
         self.compaction_count = 0      # tail flushes
         self.merge_count = 0           # segment merges
         self.merged_points = 0         # points moved by merges
+        self.journal = None            # durability.Journal when Castor.open'd
 
     # ---------------- write path ----------------
     def append(self, ts_id: str, times, values) -> int:
@@ -139,6 +140,10 @@ class TimeSeriesStore:
             s.t_min = min(s.t_min, float(times.min()))
             s.t_max = max(s.t_max, float(times.max()))
             self.append_count += times.size
+            j = self.journal
+            if j is not None:      # one record per append call (atomic:
+                j.append("ts", {   # a chunk replays whole or not at all)
+                    "id": ts_id, "t": times, "v": values})
             if s.tail_n >= self.tail_max:
                 self._flush_tail(s)
                 self._tier_merge(s)
@@ -183,6 +188,11 @@ class TimeSeriesStore:
                     self._flush_tail(s)
                     self._tier_merge(s)
             self.append_count += t.size
+            j = self.journal
+            if j is not None:      # whole batch = one atomic record (the
+                j.append("tsp", {  # detection flow suppresses this and
+                    "ids": list(ts_ids), "t": t, "v": v})   # journals the
+            # coarser "det" record instead — see DetectionStore.save_many)
         return int(t.size)
 
     def _flush_tail(self, s: _Series) -> None:

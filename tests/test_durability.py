@@ -1,0 +1,520 @@
+"""Durability subsystem: WAL codec properties, journal group-commit +
+snapshot/compaction, idempotent flush-on-close, and crash-restart
+end-to-end across all four forecasters plus the minutely detection flow.
+
+Contracts pinned here:
+  * codec: arbitrary record sequences round-trip BITWISE; every byte-level
+    truncation and single-byte corruption of the tail decodes to exactly
+    the longest valid prefix — and never raises;
+  * recovery: ``Castor.open`` over snapshot-then-WAL rebuilds bitwise-
+    equal stores, re-arms the calendar queue, and the boundary-stamped
+    catch-up fills any lost suffix replay-faithfully (kill after poll k
+    == uninterrupted run, for lr/gam/ann/lstm and the detection flow);
+  * torn tails: a crash mid-segment-write (CrashingStorage) or any
+    enumerated crash state (crash_states) recovers without error;
+  * Castor.close: idempotent, flushes buffered WAL records before
+    releasing storage; FilesystemStorage lists deterministically sorted.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.castor import Castor, HOUR, MINUTE
+from repro.durability.chaos import (CrashingStorage, ProcessCrash,
+                                    clone_to_memory, crash_states)
+from repro.durability.journal import (Journal, load_records, replay_records,
+                                      snapshot_records)
+from repro.durability.wal import (HEADER_SIZE, decode_records, encode_record,
+                                  split_frames)
+from repro.forecast import (ANNForecaster, GAMForecaster, LSTMForecaster,
+                            LinearForecaster)
+from repro.serverless.storage import FilesystemStorage, InMemoryStorage
+from repro.testing import (FLEET_NOW, assert_stores_bitwise_equal,
+                           detection_plan, drive_plan, snapshot_stores,
+                           steady_plan)
+
+MODELS = {
+    "lr": (LinearForecaster, {}),
+    "gam": (GAMForecaster, {}),
+    "ann": (ANNForecaster, {"hidden": 8, "epochs": 20}),
+    "lstm": (LSTMForecaster, {"hidden": 8, "epochs": 20}),
+}
+
+
+# --------------------------------------------------------------- codec
+
+
+def _mk_records(chunks):
+    """Turn a list of float-lists into framed ("ts", ...) records."""
+    return [("ts", {"id": f"s{i}", "t": np.asarray(c, np.float64),
+                    "v": np.asarray(c, np.float64) * 2.0})
+            for i, c in enumerate(chunks)]
+
+
+def _assert_records_equal(got, want):
+    assert len(got) == len(want)
+    for (op_g, d_g), (op_w, d_w) in zip(got, want):
+        assert op_g == op_w
+        assert d_g["id"] == d_w["id"]
+        assert d_g["t"].dtype == d_w["t"].dtype
+        assert d_g["t"].tobytes() == d_w["t"].tobytes()
+        assert d_g["v"].tobytes() == d_w["v"].tobytes()
+
+
+@settings(max_examples=25)
+@given(st.lists(st.lists(st.floats(min_value=-1e12, max_value=1e12),
+                         min_size=0, max_size=7),
+                min_size=0, max_size=6))
+def test_codec_roundtrip_bitwise(chunks):
+    recs = _mk_records(chunks)
+    blob = b"".join(encode_record(op, obj) for op, obj in recs)
+    got, valid, clean = decode_records(blob)
+    assert clean and valid == len(blob)
+    _assert_records_equal(got, recs)
+    assert len(split_frames(blob)) == len(recs)
+
+
+@settings(max_examples=25)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                min_size=1, max_size=9),
+       st.integers(min_value=0, max_value=10**9))
+def test_codec_truncation_yields_longest_valid_prefix(chunk, cut_seed):
+    recs = _mk_records([chunk, chunk[::-1], chunk])
+    frames = [encode_record(op, obj) for op, obj in recs]
+    blob = b"".join(frames)
+    cut = cut_seed % len(blob)          # every byte offset reachable
+    got, valid, clean = decode_records(blob[:cut])
+    # exactly the frames that fit entirely under the cut survive
+    want_n, pos = 0, 0
+    for f in frames:
+        if pos + len(f) <= cut:
+            want_n += 1
+            pos += len(f)
+    assert len(got) == want_n
+    assert valid == pos
+    assert clean == (cut == pos)
+    _assert_records_equal(got, recs[:want_n])
+
+
+def test_codec_every_truncation_never_raises():
+    """Exhaustive: all prefixes of a 3-record blob decode cleanly to a
+    record prefix (the property test samples offsets; this nails all)."""
+    recs = _mk_records([[1.0, 2.0], [3.0], [4.0, 5.0, 6.0]])
+    blob = b"".join(encode_record(op, obj) for op, obj in recs)
+    for cut in range(len(blob) + 1):
+        got, valid, _clean = decode_records(blob[:cut])
+        assert valid <= cut
+        _assert_records_equal(got, recs[:len(got)])
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=0, max_value=10**9),
+       st.integers(min_value=1, max_value=255))
+def test_codec_single_byte_corruption_detected(pos_seed, xor):
+    recs = _mk_records([[1.0, 2.0, 3.0], [4.0], [5.0, 6.0]])
+    frames = [encode_record(op, obj) for op, obj in recs]
+    blob = bytearray(b"".join(frames))
+    # corrupt one byte of the LAST frame (header or payload)
+    tail_start = len(blob) - len(frames[-1])
+    pos = tail_start + pos_seed % len(frames[-1])
+    blob[pos] ^= xor
+    got, valid, clean = decode_records(bytes(blob))
+    assert not clean
+    assert len(got) == len(recs) - 1    # tail dropped, prefix intact
+    assert valid == tail_start
+    _assert_records_equal(got, recs[:-1])
+
+
+def test_codec_corrupt_mid_frame_drops_suffix():
+    """A flipped byte in frame 1 of 3 must also drop frames 2-3: after a
+    bad checksum nothing downstream can be trusted (lengths may lie)."""
+    recs = _mk_records([[1.0], [2.0], [3.0]])
+    frames = [encode_record(op, obj) for op, obj in recs]
+    blob = bytearray(b"".join(frames))
+    blob[len(frames[0]) + HEADER_SIZE + 2] ^= 0x40
+    got, _valid, clean = decode_records(bytes(blob))
+    assert not clean and len(got) == 1
+    _assert_records_equal(got, recs[:1])
+
+
+# -------------------------------------------------------------- journal
+
+
+def test_journal_group_commit_one_segment_per_commit():
+    storage = InMemoryStorage()
+    j = Journal(storage)
+    for i in range(10):
+        j.append("ts", {"id": "a", "t": np.arange(3.0), "v": np.arange(3.0)})
+    assert storage.list() == []                  # buffered, not written
+    assert j.commit()
+    assert len(storage.list("wal/")) == 1        # ONE put for 10 records
+    assert not j.commit()                        # empty commit: no segment
+    j.append("meta", {"x": 1})
+    j.commit()
+    segs = storage.list("wal/")
+    assert len(segs) == 2 and segs == sorted(segs)
+    recs, stats = load_records(storage)
+    assert len(recs) == 11 and stats["next_seq"] == 2
+
+
+def test_journal_auto_flush_bounds_buffer():
+    storage = InMemoryStorage()
+    j = Journal(storage, max_buffer_bytes=1024)
+    for i in range(50):
+        j.append("ts", {"id": "a", "t": np.arange(16.0),
+                        "v": np.arange(16.0)})
+    assert j.auto_flushes > 0 and len(storage.list("wal/")) > 0
+    j.commit()
+    recs, _ = load_records(storage)
+    assert len(recs) == 50
+
+
+def test_journal_close_idempotent_and_final():
+    storage = InMemoryStorage()
+    j = Journal(storage)
+    j.append("meta", {"x": 1})
+    j.close()
+    assert len(storage.list("wal/")) == 1        # flushed on close
+    j.close()                                    # no-op, no raise
+    j.append("meta", {"x": 2})                   # dropped after close
+    j.commit()
+    recs, _ = load_records(storage)
+    assert len(recs) == 1
+
+
+def test_journal_pipelined_commit_barrier_and_order():
+    """Pipelined commit hands the put to a writer thread; barrier/close
+    wait for it, segments land in seq order, and a writer-thread error
+    surfaces at the NEXT commit (not silently)."""
+    storage = InMemoryStorage()
+    j = Journal(storage, pipelined=True)
+    for k in range(4):
+        j.append("meta", {"k": k})
+        j.commit()
+    j.barrier()
+    segs = storage.list("wal/")
+    assert len(segs) == 4 and segs == sorted(segs)
+    recs, stats = load_records(storage)
+    assert [d["k"] for _, d in recs] == [0, 1, 2, 3]
+    j.close()
+    # a crashing put in the writer thread re-raises on the next commit
+    crashing = CrashingStorage(InMemoryStorage(), puts_before_crash=0)
+    j2 = Journal(crashing, pipelined=True)
+    j2.append("meta", {"x": 1})
+    j2.commit()                                  # enqueues the dying put
+    j2.append("meta", {"x": 2})
+    with pytest.raises(ProcessCrash):
+        j2.commit()
+
+
+def test_forecast_batch_record_roundtrip():
+    """Uniform fleet bins stack into (n, h) arrays; mixed batches fall
+    back to the per-forecast list — both replay bitwise."""
+    from repro.core.lineage import (Forecast, forecast_batch_record,
+                                    forecasts_from_batch)
+    rng = np.random.default_rng(5)
+
+    def fc(i, h, banded=True):
+        v = rng.normal(size=h)
+        return Forecast(deployment_name=f"d{i}", signal="S", entity=f"e{i}",
+                        created_at=float(i), times=np.arange(float(h)),
+                        values=v, model_version=1,
+                        lower=v - 1 if banded else None,
+                        upper=v + 1 if banded else None)
+
+    uniform = [fc(i, 7) for i in range(5)]
+    d = forecast_batch_record(uniform)
+    # all five share one horizon grid -> times dedupes to a single row
+    assert "meta" in d and d["times"].shape == (7,)
+    assert d["values"].shape == (5, 7)
+    shifted = [fc(i, 7) for i in range(5)]       # distinct grids stay 2-D
+    shifted[2] = Forecast(**{**shifted[2].__dict__,
+                             "times": shifted[2].times + 0.5})
+    d3 = forecast_batch_record(shifted)
+    assert "meta" in d3 and d3["times"].shape == (5, 7)
+    mixed = [fc(0, 7), fc(1, 9), fc(2, 7, banded=False)]
+    d2 = forecast_batch_record(mixed)
+    assert "forecasts" in d2                     # fallback format
+    for batch, rec in ((uniform, d), (shifted, d3), (mixed, d2)):
+        # through the actual codec, so stacking survives _enc/_dec
+        [(op, dec)] = decode_records(encode_record("fc", rec))[0]
+        back = forecasts_from_batch(dec)
+        assert len(back) == len(batch)
+        for a, b in zip(batch, back):
+            assert a.deployment_name == b.deployment_name
+            assert a.times.tobytes() == b.times.tobytes()
+            assert a.values.tobytes() == b.values.tobytes()
+            assert (a.lower is None) == (b.lower is None)
+            if a.lower is not None:
+                assert a.lower.tobytes() == b.lower.tobytes()
+                assert a.upper.tobytes() == b.upper.tobytes()
+
+
+def test_snapshot_compacts_and_recovery_prefers_it():
+    storage = InMemoryStorage()
+    c = Castor.open(storage=storage, snapshot_every=0)
+    c.add_signal("S", "u")
+    c.add_entity("E", "KIND")
+    c.ingest("raw::E", np.arange(5.0), np.arange(5.0) * 2)
+    c.link("raw::E", "S", "E")
+    c.journal.commit()
+    c.journal.snapshot()
+    assert storage.list("wal/") == []            # compacted away
+    snaps = storage.list("snap/")
+    assert len(snaps) == 1
+    c.ingest("raw::E", np.arange(5.0, 8.0), np.arange(5.0, 8.0) * 2)
+    c.journal.commit()                           # post-snapshot delta
+    c.close()
+    c2 = Castor.open(storage=storage)
+    t, v = c2.read("S", "E")
+    np.testing.assert_array_equal(t, np.arange(8.0))
+    np.testing.assert_array_equal(v, np.arange(8.0) * 2)
+    assert c2._recovery_stats["snapshot"] == snaps[0]
+    c2.close()
+
+
+def test_corrupt_snapshot_falls_back_without_data_loss():
+    """retain_segments keeps the pre-snapshot WAL; if the newest snapshot
+    is corrupt, recovery must fall back to replaying it."""
+    storage = InMemoryStorage()
+    c = Castor.open(storage=storage, snapshot_every=0, retain_segments=True)
+    c.ingest("raw::x", np.arange(4.0), np.arange(4.0))
+    c.journal.commit()
+    c.journal.snapshot()
+    c.close()
+    key = storage.list("snap/")[0]
+    blob = bytearray(storage.get(key))
+    blob[len(blob) // 2] ^= 0xFF
+    storage.put(key, bytes(blob))
+    c2 = Castor.open(storage=storage)
+    assert c2._recovery_stats["corrupt_snapshots"] == 1
+    assert c2._recovery_stats["snapshot"] is None
+    t, _ = c2.store.read("raw::x")
+    np.testing.assert_array_equal(t, np.arange(4.0))
+    c2.close()
+
+
+def test_snapshot_records_replay_into_equal_state():
+    storage = InMemoryStorage()
+    c = Castor.open(storage=storage)
+    c.add_signal("S")
+    c.add_entity("P", "ROOT")
+    c.add_entity("E", "KIND", parent="P")
+    c.ingest("raw::E", np.arange(6.0), np.sin(np.arange(6.0)))
+    c.link("raw::E", "S", "E")
+    frames = b"".join(snapshot_records(c))
+    recs, _valid, clean = decode_records(frames)
+    assert clean
+    c2 = Castor()
+    replay_records(c2, recs)
+    assert c2.graph.parent("E").name == "P"
+    np.testing.assert_array_equal(c2.store.read("raw::E")[0],
+                                  c.store.read("raw::E")[0])
+    c.close()
+
+
+# ------------------------------------------------- Castor lifecycle
+
+
+def test_castor_close_idempotent_and_context_manager():
+    """Satellite: double-close and __exit__ after explicit close() are
+    no-ops; buffered WAL records flush before storage is released."""
+    storage = InMemoryStorage()
+    c = Castor.open(storage=storage)
+    c.ingest("raw::a", np.arange(3.0), np.arange(3.0))
+    with c:
+        c.close()                       # explicit close inside the block
+    c.close()                           # triple close: still fine
+    recs, _ = load_records(storage)     # the un-committed ingest survived
+    assert any(op == "ts" for op, _d in recs)
+    # plain (non-durable) castor: same contract
+    p = Castor()
+    with p:
+        p.close()
+    p.close()
+
+
+def test_castor_open_filesystem_path(tmp_path):
+    """Castor.open(path) end-to-end on a real directory with fsync'd
+    atomic puts — reopen recovers across 'process restarts'."""
+    root = str(tmp_path / "waldir")
+    c = Castor.open(root)
+    c.add_signal("S")
+    c.add_entity("E")
+    c.ingest("raw::E", np.arange(4.0), np.arange(4.0) * 3)
+    c.link("raw::E", "S", "E")
+    c.close()
+    c2 = Castor.open(root)
+    np.testing.assert_array_equal(c2.read("S", "E")[1], np.arange(4.0) * 3)
+    c2.close()
+    assert os.path.isdir(root)          # unowned root survives close
+
+
+def test_filesystem_storage_list_sorted_deterministic(tmp_path):
+    """Satellite: list() is sorted regardless of creation order or
+    directory nesting (os.listdir order is filesystem-dependent)."""
+    fs = FilesystemStorage(root=str(tmp_path / "b"), fsync=True)
+    keys = ["z/9.log", "a/10.log", "m.log", "a/2.log", "z/1.log", "b/x/y.log"]
+    for k in keys:
+        fs.put(k, b"x")
+    assert fs.list() == sorted(keys)
+    assert fs.list("a/") == ["a/10.log", "a/2.log"]
+    assert fs.list() == fs.list()       # stable across calls
+    fs.close()
+
+
+def test_weather_seed_survives_recovery():
+    storage = InMemoryStorage()
+    c = Castor.open(storage=storage, weather_seed=99)
+    c.journal.commit()
+    c.close()
+    c2 = Castor.open(storage=storage, weather_seed=1)   # arg loses to WAL
+    assert c2.weather_seed == 99
+    c2.close()
+
+
+# ------------------------------------------- crash-restart end-to-end
+
+
+def _run_durable(plan, storage, k=None, **open_kw):
+    """Drive ``plan`` on a durable castor over ``storage`` through the
+    first ``k`` boundaries (all when None); leave the castor open."""
+    c = Castor.open(storage=storage, **open_kw)
+    drive_plan(c, plan, boundaries=plan["boundaries"][:k])
+    return c
+
+
+@pytest.mark.parametrize("kind", list(MODELS))
+def test_crash_restart_forecasters_bitwise(kind):
+    """Kill -9 after poll k (the cloned storage is byte-identical to a
+    post-commit crash), reopen, catch up — bitwise-equal stores to the
+    uninterrupted run, for every forecaster family."""
+    cls, hp = MODELS[kind]
+    plan = steady_plan(kind, cls, hp, n=2, polls=3)
+    storage = InMemoryStorage()
+    ref = _run_durable(plan, storage)
+    ref_snap = snapshot_stores(ref)
+    mid = _run_durable(plan, InMemoryStorage(), k=2)
+    mid.journal.barrier()                 # pipelined write must land
+    dead = clone_to_memory(mid.journal.storage)   # the post-crash disk
+    mid.close()
+    ref.close()
+    c = Castor.open(storage=dead)
+    assert c.versions.count() > 0                 # poll-k state recovered
+    drive_plan(c, plan)                           # catch-up re-drive
+    assert_stores_bitwise_equal(ref_snap, c, context=f"{kind} crash@2")
+    c.close()
+
+
+def test_crash_restart_detection_flow_bitwise():
+    """The minutely detection flow: kill mid-stream, recover, catch up —
+    detections AND the derived anomaly series are bitwise-equal (the
+    atomic "det" record must keep them in lockstep across the tear)."""
+    plan = detection_plan(n=2, minutes=8)
+    ref = _run_durable(plan, InMemoryStorage())
+    ref_snap = snapshot_stores(ref)
+    ref.close()
+    mid = _run_durable(plan, InMemoryStorage(), k=5)   # FLEET_NOW + 4 min
+    mid.journal.barrier()
+    dead = clone_to_memory(mid.journal.storage)
+    mid.close()
+    c = Castor.open(storage=dead)
+    assert c.detections.count() > 0
+    drive_plan(c, plan)
+    assert_stores_bitwise_equal(ref_snap, c, context="detection crash@5")
+    c.close()
+
+
+def test_crash_restart_serverless_executor_bitwise():
+    """Journaling also covers the serverless absorb path (worker results
+    persist through the same stores the WAL hooks)."""
+    plan = steady_plan("lr", LinearForecaster, {}, n=2, polls=2)
+    ref = _run_durable(plan, InMemoryStorage())
+    ref_snap = snapshot_stores(ref)
+    ref.close()
+    storage = InMemoryStorage()
+    mid = Castor.open(storage=storage)
+    drive_plan(mid, plan, executor="serverless",
+               boundaries=plan["boundaries"][:1])
+    mid.journal.barrier()
+    dead = clone_to_memory(storage)
+    mid.close()
+    c = Castor.open(storage=dead)
+    drive_plan(c, plan, executor="serverless")
+    assert_stores_bitwise_equal(ref_snap, c, context="serverless crash@1")
+    c.close()
+
+
+def test_live_torn_write_crash_recovers():
+    """A CrashingStorage kill mid-segment-put (half the bytes persisted)
+    surfaces as a process death at the next commit — or at the barrier/
+    close if the pipelined write of the LAST tick is the one that died;
+    recovery drops the torn tail via checksum and catch-up restores
+    bitwise equality."""
+    plan = steady_plan("lr", LinearForecaster, {}, n=2, polls=3)
+    ref = _run_durable(plan, InMemoryStorage())
+    ref_snap = snapshot_stores(ref)
+    ref.close()
+    inner = InMemoryStorage()
+    crashing = CrashingStorage(inner, puts_before_crash=2,
+                               torn_fraction=0.5)
+    with pytest.raises(ProcessCrash):
+        _run_durable(plan, crashing).journal.barrier()
+    assert crashing.crashed
+    c = Castor.open(storage=inner)                # recover from the wreck
+    assert c._recovery_stats["torn_segments"] == 1
+    drive_plan(c, plan)
+    assert_stores_bitwise_equal(ref_snap, c, context="live torn write")
+    c.close()
+
+
+def test_crash_state_sweep_smoke():
+    """Mini chaos sweep (the full sweep is bench_durability's gate):
+    every enumerated crash state of a short detection run — including
+    torn and corrupted tails — recovers to bitwise equality."""
+    plan = detection_plan(n=2, minutes=4)
+    storage = InMemoryStorage()
+    ref = _run_durable(plan, storage, snapshot_every=3,
+                       retain_segments=True)
+    ref_snap = snapshot_stores(ref)
+    ref.close()
+    states = list(crash_states(storage, torn=True, stride=4))
+    assert len(states) > 5
+    for label, st_ in states:
+        c = Castor.open(storage=st_)
+        drive_plan(c, plan)
+        assert_stores_bitwise_equal(ref_snap, c, context=label)
+        c.close()
+
+
+def test_scheduler_retry_stamps_survive_restart():
+    """A mark_failed retry queued at crash time must re-fire after
+    recovery: the "sched" record re-arms the calendar entry."""
+    from repro.core.scheduler import Job
+    plan = steady_plan("lr", LinearForecaster, {}, n=2, polls=1)
+    storage = InMemoryStorage()
+    c = _run_durable(plan, storage)
+    name = c.deployments.all()[0].name
+    # a TRAIN retry at the already-covered FLEET_NOW boundary: the only
+    # way it can ever fire again is through the persisted retry queue
+    # (train_every is a day, so no new train boundary is due below)
+    job = Job(deployment_name=name, package="lr", version="1.0",
+              task="train", scheduled_at=FLEET_NOW,
+              signal="ENERGY_LOAD", entity=c.deployments.get(name).entity)
+    c.scheduler.mark_failed(job)
+    c._commit_tick()                    # commit the retry delta, then die
+    c.journal.barrier()
+    dead = clone_to_memory(storage)
+    c.close()
+    c2 = Castor.open(storage=dead)
+    assert (name, "train") in c2.scheduler._failed
+    for pkg, ver, cls in plan["publish"]:
+        c2.publish(pkg, ver, cls)
+    jobs = c2.tick(FLEET_NOW + MINUTE)
+    stamps = [r.job.scheduled_at for r in jobs
+              if r.job.deployment_name == name and r.job.task == "train"]
+    assert stamps == [FLEET_NOW]        # the queued retry re-fired
+    assert all(r.ok for r in jobs)
+    c2.close()
