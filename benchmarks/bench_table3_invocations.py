@@ -219,7 +219,7 @@ def _warm_affinity(cfg: dict) -> tuple[dict, list]:
                "runtime_warm_loads": warm_loads,
                "first_poll_s": walls[0], "warm_poll_s": min(walls[1:]),
                **s}
-    return summary, ex.monitor.records
+    return summary, list(ex.monitor.records)   # ring -> JSON-able list
 
 
 def _proc(cfg: dict) -> dict:
@@ -319,6 +319,7 @@ def _chaos(cfg: dict) -> dict:
     on every invocation's first delivery; the stores must end bitwise
     equal to the fault-free run (asserted — the exactly-once gate)."""
     from repro.forecast import LinearForecaster
+    from repro.obs.export import write_json_artifact
     from repro.serverless import ChaosPolicy, ServerlessExecutor
     from repro.testing import (FLEET_NOW, HOUR, assert_stores_bitwise_equal,
                                build_steady_castor, snapshot_stores)
@@ -356,16 +357,16 @@ def _chaos(cfg: dict) -> dict:
                       "retries": s["retries"],
                       "failed_invocations": s["failed_invocations"],
                       "stores_bitwise_equal": True}
-        records[name] = ex.monitor.records
+        records[name] = list(ex.monitor.records)  # ring -> JSON-able list
     out = {"polls": polls, "deployments": n, "forecasters": ["lr"],
            "fault_free_wall_s": ref_wall, "scenarios": rows}
-    CHAOS_TELEMETRY.parent.mkdir(exist_ok=True)
-    CHAOS_TELEMETRY.write_text(json.dumps(
-        {"summary": out, "records": records}, indent=1))
+    write_json_artifact(CHAOS_TELEMETRY,
+                        {"summary": out, "records": records})
     return out
 
 
 def _child(smoke: bool, sections: tuple[str, ...]) -> None:
+    from repro.obs.export import write_json_artifact
     cfg = SMOKE if smoke else FULL
     # merge into an existing artifact: CI runs the sections as separate
     # steps (perf sweep vs chaos/elastic) against the same OUT file
@@ -385,11 +386,11 @@ def _child(smoke: bool, sections: tuple[str, ...]) -> None:
     if "warm" in sections:
         warm, records = _warm_affinity(cfg)
         out["warm_affinity"] = warm
-        TELEMETRY.parent.mkdir(exist_ok=True)
-        TELEMETRY.write_text(json.dumps(
+        write_json_artifact(
+            TELEMETRY,
             {"warm_affinity_records": records,
              "summary": {k: v for k, v in warm.items()
-                         if not isinstance(v, dict)}}, indent=1))
+                         if not isinstance(v, dict)}})
     if "process" in sections:
         out["process"] = _proc(cfg)
     if "elastic" in sections:

@@ -10,6 +10,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from ..obs.metrics import get_metrics
+from ..obs.trace import get_tracer
 from ..timeseries.store import TimeSeriesStore
 from ..timeseries.weather import WeatherService
 from .deployment import DeploymentStore, ModelDeployment, deploy_for_all
@@ -174,27 +176,32 @@ class Castor:
         "serverless" (the invocation pipeline in repro/serverless/; its
         warm workers also persist across ticks), or "local" (the
         paper-faithful stateless pool, built per call)."""
-        jobs = self.scheduler.poll(now)
-        if not jobs:
-            self._commit_tick()        # flush buffered ingest records too
-            return []
-        if executor == "fleet":
-            ex = self.fleet_executor(max_parallel=max_parallel)
-        elif executor == "serverless":
-            # honored on FIRST construction (the executor is cached)
-            ex = self.serverless_executor(max_in_flight=max_parallel)
-        elif executor == "local":
-            ex = LocalPoolExecutor(self, max_parallel=max_parallel)
-        else:
-            raise ValueError(f"unknown executor {executor!r} "
-                             "(expected fleet | serverless | local)")
-        try:
-            return ex.run(jobs)
-        finally:
-            # the group-commit point: effects first, then the scheduler
-            # delta, one segment put — even when the executor raised (any
-            # persisted effects plus ``mark_failed`` retry stamps)
-            self._commit_tick()
+        tracer = self.tracer
+        with tracer.span("castor.tick", now=now, executor=executor):
+            jobs = self.scheduler.poll(now)
+            if not jobs:
+                with tracer.span("journal.commit"):
+                    self._commit_tick()    # flush buffered ingest records
+                return []
+            if executor == "fleet":
+                ex = self.fleet_executor(max_parallel=max_parallel)
+            elif executor == "serverless":
+                # honored on FIRST construction (the executor is cached)
+                ex = self.serverless_executor(max_in_flight=max_parallel)
+            elif executor == "local":
+                ex = LocalPoolExecutor(self, max_parallel=max_parallel)
+            else:
+                raise ValueError(f"unknown executor {executor!r} "
+                                 "(expected fleet | serverless | local)")
+            try:
+                return ex.run(jobs)
+            finally:
+                # the group-commit point: effects first, then the
+                # scheduler delta, one segment put — even when the
+                # executor raised (any persisted effects plus
+                # ``mark_failed`` retry stamps)
+                with tracer.span("journal.commit"):
+                    self._commit_tick()
 
     def fleet_executor(self, *, max_parallel: int = 16) -> FleetExecutor:
         """The system's long-lived fleet executor (steady-state runtime
@@ -268,6 +275,68 @@ class Castor:
         if fc is None:
             return None
         return fc.times, fc.values, fc.lower, fc.upper
+
+    # ---------------- observability plane (repro.obs) ----------------
+    @property
+    def tracer(self):
+        """The process-global span tracer (obs/trace.py). A property,
+        not a constructor capture: ``obs.trace.set_tracer`` swaps (and
+        ``.enabled`` toggles) take effect immediately everywhere."""
+        return get_tracer()
+
+    @property
+    def metrics(self):
+        """The process-global metrics registry (obs/metrics.py)."""
+        return get_metrics()
+
+    def dump_trace(self, path) -> str:
+        """Write every buffered span as Chrome trace-event JSON — open
+        the file at ui.perfetto.dev (or chrome://tracing)."""
+        from ..obs.export import write_chrome_trace
+        return str(write_chrome_trace(path, self.tracer))
+
+    def _mirror_metrics(self) -> None:
+        """Absorb the scattered per-subsystem counters into the one
+        namespaced registry (snapshot-time mirroring: the hot paths that
+        maintain these counters stay untouched)."""
+        m = self.metrics
+        st = self.store.stats()
+        m.gauge("store.points").set(st["points"])
+        m.gauge("store.segments").set(st["segments"])
+        m.gauge("store.reads").set(st["reads"])
+        m.gauge("store.read_many").set(st["read_many"])
+        m.gauge("store.delta_reads").set(st["delta_reads"])
+        from ..forecast.base import rollout_cache_stats
+        rc = rollout_cache_stats()
+        m.gauge("rollout_cache.hits").set(rc["hits"])
+        m.gauge("rollout_cache.misses").set(rc["misses"])
+        from ..forecast.features import trace_count
+        m.gauge("jit.retrace.total").set(trace_count())
+        sched = self.scheduler.stats()
+        m.gauge("scheduler.heap_entries").set(sched["heap_entries"])
+        m.gauge("scheduler.tracked").set(sched["tracked"])
+        m.gauge("scheduler.interned_bins").set(sched["interned_bins"])
+        cached = getattr(self, "_fleet_ex", None)
+        rt = cached[1].runtime if cached is not None else None
+        if rt is not None:
+            m.gauge("runtime.cold_loads").set(rt.cold_loads)
+            m.gauge("runtime.warm_loads").set(rt.warm_loads)
+            m.gauge("runtime.invalidations").set(rt.invalidations)
+        if self.journal is not None:
+            js = self.journal.stats()
+            m.gauge("wal.records").set(js["records"])
+            m.gauge("wal.segments").set(js["segments"])
+            m.gauge("wal.snapshots").set(js["snapshots"])
+            m.gauge("wal.bytes_written").set(js["bytes_written"])
+
+    def snapshot(self) -> dict:
+        """The unified observability snapshot: ``{"stats": <the exact
+        dict stats() returns>, "metrics": <registry snapshot>,
+        "trace": <tracer ring stats>}``. ``stats()`` is the
+        backward-compatible view over this snapshot's ``"stats"`` key."""
+        from ..obs.export import obs_snapshot
+        self._mirror_metrics()
+        return obs_snapshot(self.stats(), self.tracer, self.metrics)
 
     def stats(self) -> dict:
         st = self.store.stats()

@@ -54,6 +54,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs.metrics import get_metrics
+from ..obs.trace import get_tracer
 from .lineage import Forecast
 from .registry import ModelInterface
 from .scheduler import Job, bin_jobs
@@ -187,6 +189,11 @@ class LocalPoolExecutor(_ExecBase):
     def _run_phase(self, jobs: List[Job]) -> List[JobResult]:
         if not jobs:
             return []
+        with get_tracer().span("exec.pool", task=jobs[0].task,
+                               jobs=len(jobs)):
+            return self._run_phase_inner(jobs)
+
+    def _run_phase_inner(self, jobs: List[Job]) -> List[JobResult]:
         results: Dict[int, JobResult] = {}
         durations: List[float] = []
 
@@ -323,26 +330,35 @@ class FleetExecutor(_ExecBase):
                 t_append(j)
             else:
                 s_append(j)
-        for phase in (trains, scores, detects):
+        tracer = get_tracer()
+        for task, phase in (("train", trains), ("score", scores),
+                            ("detect", detects)):
+            if not phase:
+                continue
             # chronological bins regardless of caller order: catch-up
             # occurrences of one deployment must train/score oldest first
             phase.sort(key=_BY_TIME)
-            fleet_bins: List[Tuple[tuple, List[Job]]] = []
-            pool_jobs: List[Job] = []
-            for key, bin_jobs_ in bin_jobs(phase).items():
-                cls = self.system.registry.get(key[0], key[1])
-                if getattr(cls, "SUPPORTS_FLEET", False):
-                    fleet_bins.append((key, bin_jobs_))
-                else:
-                    # non-fleet jobs pool into ONE fallback run per phase:
-                    # scheduled_at fragments their bins, and the pool —
-                    # unlike a megabatch — has no shared-time-axis reason
-                    # to run those fragments sequentially
-                    pool_jobs.extend(bin_jobs_)
-            if pool_jobs:
-                out.extend(self.fallback.run(pool_jobs))
-            for key, bin_jobs_ in fleet_bins:
-                out.extend(self._run_bin(key, bin_jobs_))
+            with tracer.span("exec.phase." + task, jobs=len(phase)):
+                fleet_bins: List[Tuple[tuple, List[Job]]] = []
+                pool_jobs: List[Job] = []
+                for key, bin_jobs_ in bin_jobs(phase).items():
+                    cls = self.system.registry.get(key[0], key[1])
+                    if getattr(cls, "SUPPORTS_FLEET", False):
+                        fleet_bins.append((key, bin_jobs_))
+                    else:
+                        # non-fleet jobs pool into ONE fallback run per
+                        # phase: scheduled_at fragments their bins, and
+                        # the pool — unlike a megabatch — has no
+                        # shared-time-axis reason to run those fragments
+                        # sequentially
+                        pool_jobs.extend(bin_jobs_)
+                if pool_jobs:
+                    out.extend(self.fallback.run(pool_jobs))
+                for key, bin_jobs_ in fleet_bins:
+                    with tracer.span("exec.bin",
+                                     bin_id=bin_jobs_[0].bin_id,
+                                     jobs=len(bin_jobs_)):
+                        out.extend(self._run_bin(key, bin_jobs_))
         return out
 
     def _bin_mesh(self, bin_jobs_: List[Job]):
@@ -536,6 +552,21 @@ class FleetExecutor(_ExecBase):
             if self.runtime is not None:
                 stats.update(self.runtime.pop_stats())
             self.last_bin_stats.append(stats)
+            # absorb the bin's telemetry into the metrics registry (once
+            # per bin — off the per-job hot path)
+            m = get_metrics()
+            m.counter("exec.bins").inc()
+            m.counter("exec.jobs").inc(stats["jobs"])
+            m.histogram("exec.bin_seconds").observe(dt)
+            m.counter("exec.retraces").inc(stats["retraces"])
+            m.counter("exec.rollout_cache_hits").inc(
+                stats["rollout_cache_hits"])
+            m.counter("exec.rollout_cache_misses").inc(
+                stats["rollout_cache_misses"])
+            if stats["cache_hit"]:
+                m.counter("runtime.cache_hits").inc()
+            if stats["delta_rows"]:
+                m.counter("runtime.delta_rows").inc(stats["delta_rows"])
         except Exception as e:  # noqa: BLE001
             dt = time.perf_counter() - t0
             err = f"{type(e).__name__}: {e}"

@@ -92,7 +92,7 @@ def _make_update(d: int, T: int, warm_s: int):
     import jax.numpy as jnp
 
     def upd(ring, filled, ring_t, vals, mask, tvals):
-        note_trace()                 # Python body runs only while tracing
+        note_trace("ring_update")    # Python body runs only while tracing
 
         def ff(prev, xs):
             v, m = xs
@@ -127,7 +127,7 @@ def _make_assemble(spec: FeatureSpec, T: int):
     warm = max(tl, wl if spec.use_weather else 0)
 
     def asm(y_win, temps, cal):      # (N,T) f32, (N,T) f32, (T,5) f32
-        note_trace()
+        note_trace("assemble")
         cols = [y_win[:, warm - L: T - L] for L in range(1, tl + 1)]
         if spec.use_weather:
             cols.append(temps[:, warm:])
@@ -300,6 +300,12 @@ class FleetRuntime:
         path issues) plus one vectorized observed-temperature call;
         host-aligned rows kept in f64 for the cold train path, rings
         uploaded once."""
+        from ..obs.trace import get_tracer
+        with get_tracer().span("runtime.build", n=len(ids)):
+            return self._build_inner(key, ids, instances, spec, t0, now, T)
+
+    def _build_inner(self, key, ids, instances, spec: FeatureSpec,
+                     t0: float, now: float, T: int) -> _BinState:
         import jax.numpy as jnp
         ctxs = [inst.context for inst in instances]
         grid, targets, mask, prior = fleet_window(

@@ -237,6 +237,16 @@ class ModelScheduler:
         never-published package) pushes every popped entry back and
         leaves ALL per-deployment state untouched, so no occurrence can
         be emitted into a poll that then throws the jobs away."""
+        from ..obs.trace import get_tracer
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._poll(now)
+        with tracer.span("scheduler.poll", now=now) as sp:
+            jobs = self._poll(now)
+            sp.set(jobs=len(jobs))
+            return jobs
+
+    def _poll(self, now: float) -> List[Job]:
         heap = self._heap
         popped: List[Tuple[float, int, str, str]] = []  # for atomic restore
         keys: Dict[Tuple[str, str], bool] = {}          # de-dup, pop order

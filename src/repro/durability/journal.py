@@ -165,8 +165,12 @@ class Journal:
             self._wait_inflight_locked()
 
     def _write_async(self, key: str, data: bytes) -> None:
+        from ..obs.trace import get_tracer
         try:
-            self.storage.put(key, data)
+            # pipelined fsync: its span lives on the writer thread (a
+            # root span there — the committing tick has already moved on)
+            with get_tracer().span("journal.fsync", bytes=len(data)):
+                self.storage.put(key, data)
         except BaseException as e:         # noqa: BLE001 — incl. chaos
             self._write_err = e
 
@@ -174,21 +178,34 @@ class Journal:
         self._wait_inflight_locked()       # at most one write in flight
         if not self._buf:
             return False
-        data = b"".join(self._buf)
-        key = wal_key(self._seq)
-        self._seq += 1
-        self.segments += 1
-        self.bytes_written += len(data)
-        self._buf = []
-        self._buf_bytes = 0
-        self._commits_since_snap += 1
-        if self.pipelined:
-            t = threading.Thread(target=self._write_async,
-                                 args=(key, data), daemon=True)
-            self._inflight = t
-            t.start()
-        else:
-            self.storage.put(key, data)
+        from ..obs.metrics import get_metrics
+        from ..obs.trace import get_tracer
+        tracer = get_tracer()
+        with tracer.span("journal.flush", records=len(self._buf)) as sp:
+            data = b"".join(self._buf)
+            sp.set(bytes=len(data))
+            key = wal_key(self._seq)
+            self._seq += 1
+            self.segments += 1
+            self.bytes_written += len(data)
+            self._buf = []
+            self._buf_bytes = 0
+            self._commits_since_snap += 1
+            m = get_metrics()
+            m.counter("wal.flushes").inc()
+            m.counter("wal.flushed_bytes").inc(len(data))
+            m.histogram("wal.segment_bytes").observe(len(data))
+            if self.pipelined:
+                # the fsync'd put happens on the writer thread and
+                # overlaps the next tick's compute; the span covers only
+                # the handoff (the fsync span lands on the writer side)
+                t = threading.Thread(target=self._write_async,
+                                     args=(key, data), daemon=True)
+                self._inflight = t
+                t.start()
+            else:
+                with tracer.span("journal.fsync", bytes=len(data)):
+                    self.storage.put(key, data)
         return True
 
     def snapshot(self) -> str:

@@ -22,6 +22,7 @@ double-append.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from contextlib import nullcontext
 from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional
@@ -29,6 +30,7 @@ from typing import Dict, List, Optional
 from ..core.deployment import DeploymentStore, ModelDeployment
 from ..core.scheduler import Schedule
 from ..core.semantics import Signal
+from ..obs.metrics import get_metrics
 
 
 @dataclass
@@ -61,12 +63,21 @@ class DetectionStore:
     """Idempotent on (deployment, scheduled_at) — the detection analogue
     of ``PredictionStore`` — plus the derived-signal write-back."""
 
-    def __init__(self, store=None, graph=None):
+    def __init__(self, store=None, graph=None, *, rolling_window: int = 64):
         self._store = store
         self._graph = graph
         self._by_dep: Dict[str, List[DetectionRecord]] = {}
         self._seen: set = set()
         self._lock = threading.Lock()
+        # per-deployment rolling forecast-error gauges (ROADMAP item-4
+        # prerequisite): the mean band-exceedance score over the last
+        # ``rolling_window`` occurrences, surfaced in the metrics
+        # registry as ``detection.rolling_error.<deployment>`` — the
+        # drift signal a retraining trigger would threshold on.
+        # dep -> [deque, running_sum, gauge]; running sum so a minutely
+        # fleet pays O(1) per record, not O(window)
+        self.rolling_window = int(rolling_window)
+        self._roll: Dict[str, list] = {}
         # (derived_signal, entity) -> ts_id: derived contexts are static
         # once registered, so a minutely fleet resolves each ONCE instead
         # of one graph round-trip per record per bin
@@ -122,6 +133,19 @@ class DetectionStore:
                 readings += rec.n_readings
                 anomalies += rec.n_anomalies
                 misses += rec.band_misses
+                # rolling forecast-error gauge, O(1) per fresh record
+                roll = self._roll.get(rec.deployment_name)
+                if roll is None:
+                    roll = self._roll[rec.deployment_name] = [
+                        deque(maxlen=self.rolling_window), 0.0,
+                        get_metrics().gauge("detection.rolling_error."
+                                            + rec.deployment_name)]
+                dq = roll[0]
+                if len(dq) == self.rolling_window:
+                    roll[1] -= dq[0]
+                dq.append(rec.score)
+                roll[1] += rec.score
+                roll[2].set(roll[1] / len(dq))
                 if not write_back:
                     continue
                 # derived-signal write-back, exactly once per occurrence:
@@ -150,6 +174,14 @@ class DetectionStore:
             if j is not None and fresh:
                 j.append("det", {"records": [asdict(r) for r in fresh],
                                  "wb": write_back})
+
+    def rolling_errors(self) -> Dict[str, float]:
+        """{deployment: mean score over its last ``rolling_window``
+        occurrences} — the per-deployment drift signal (also exported as
+        ``detection.rolling_error.*`` gauges in the metrics registry)."""
+        with self._lock:
+            return {dep: roll[1] / len(roll[0])
+                    for dep, roll in self._roll.items() if roll[0]}
 
     def history(self, deployment_name: str) -> List[DetectionRecord]:
         return list(self._by_dep.get(deployment_name, ()))

@@ -49,7 +49,7 @@ def _loss(params, X, y, y_scale):
 
 @partial(jax.jit, static_argnames=("epochs", "width", "lr"))
 def _fit_jax(key, X, y, y_scale, *, epochs: int, width: int, lr: float):
-    note_trace()                     # Python body runs only while tracing
+    note_trace("ann_fit")            # Python body runs only while tracing
     params = _init(key, X.shape[-1], width)
     opt = jax.tree_util.tree_map(lambda p: (jnp.zeros_like(p),) * 2, params)
 

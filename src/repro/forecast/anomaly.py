@@ -32,6 +32,7 @@ import numpy as np
 
 from ..core.registry import ModelInterface
 from ..flows.detection import DetectionRecord
+from ..obs.metrics import note_retrace
 
 #: floor on band width when normalizing exceedance (degenerate bands)
 EPS = 1e-9
@@ -61,6 +62,9 @@ def _band_pack(bands):
     hit = _BAND_PACKS.get(key)
     if hit is not None:
         return hit[1]
+    # the detection path's retrace analogue: a rebuild means the bin's
+    # band set changed (new scoring boundary), counted like a jit retrace
+    note_retrace("band_pack")
     grids = [_band_grid(fc) for fc in bands]
     t0s = np.asarray([g[0] for g in grids])
     steps = np.asarray([g[1] for g in grids])

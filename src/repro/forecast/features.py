@@ -9,6 +9,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..obs.metrics import note_retrace
 from ..timeseries.transforms import (HOUR, align_resample, calendar_features,
                                      calendar_features_jnp, calendar_phases,
                                      lagged_features, regular_grid)
@@ -18,14 +19,18 @@ from ..timeseries.transforms import (HOUR, align_resample, calendar_features,
 # its PYTHON body, which only executes while jax traces (a compiled cache hit
 # never re-enters Python). ``trace_count()`` deltas therefore equal the
 # number of retraces/compilations — the steady-state regression tests and
-# ``FleetExecutor.last_bin_stats["retraces"]`` are built on this.
+# ``FleetExecutor.last_bin_stats["retraces"]`` are built on this. The
+# ``name`` breaks the same events down per program family in the metrics
+# registry (``jit.retrace.<name>`` counters) without perturbing the
+# legacy global's delta semantics.
 # ---------------------------------------------------------------------------
 _TRACE_COUNT = 0
 
 
-def note_trace() -> None:
+def note_trace(name: str = "features") -> None:
     global _TRACE_COUNT
     _TRACE_COUNT += 1
+    note_retrace(name)
 
 
 def trace_count() -> int:
@@ -296,7 +301,7 @@ def make_device_rollout(predict_fn, spec: FeatureSpec, horizon: int,
     import jax.numpy as jnp
 
     def run(stacked, mu, sd, y0, tw0, temps_future, hod, dow):
-        note_trace()                 # Python body runs only while tracing
+        note_trace("rollout")        # Python body runs only while tracing
         cal = calendar_features_jnp(hod, dow)                    # (H, 5)
         xs = (jnp.moveaxis(temps_future, -1, 0), cal)
 

@@ -18,7 +18,8 @@ def _ridge_fit(X, y, lam=1e-2):
 
 
 def _ridge_fit_counted(X, y, lam=1e-2):
-    note_trace()                     # Python body runs only while tracing
+    # shared by LR and GAM (single + fleet), hence the neutral name
+    note_trace("ridge_fit")          # Python body runs only while tracing
     return _ridge_fit(X, y, lam)
 
 

@@ -67,7 +67,7 @@ def _loss(params, seqs, y, y_scale):
 
 @partial(jax.jit, static_argnames=("epochs", "width", "lr"))
 def _fit_jax(key, seqs, y, y_scale, *, epochs: int, width: int, lr: float):
-    note_trace()                     # Python body runs only while tracing
+    note_trace("lstm_fit")           # Python body runs only while tracing
     params = _init(key, width)
 
     def step(carry, i):

@@ -1,0 +1,25 @@
+"""Unified observability plane (ISSUE 10).
+
+Three small modules behind one import surface:
+
+- ``trace``   — hierarchical span tracer (counter ids, injectable clock,
+                bounded ring, cross-process stitching).
+- ``metrics`` — namespaced counters / gauges / log-bucket histograms.
+- ``export``  — Perfetto/Chrome trace-event JSON, Prometheus text
+                exposition, and the JSON snapshot ``Castor.stats()`` is a
+                view over.
+
+Everything here is host-side Python: no jax imports, no allocation on
+the hot paths, and a process-global default tracer/registry so that
+components constructed outside a ``Castor`` (tests build executors and
+stores directly) are still instrumented.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_metrics, note_retrace, retrace_counts)
+from .trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_metrics",
+    "note_retrace", "retrace_counts",
+    "NULL_TRACER", "Span", "Tracer", "get_tracer", "set_tracer",
+]

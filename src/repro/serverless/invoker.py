@@ -61,6 +61,7 @@ import numpy as np
 from ..core.executor import Executor, JobResult
 from ..core.lineage import Forecast
 from ..core.scheduler import Job, bin_jobs
+from ..obs.trace import get_tracer
 from .autoscale import AutoscalePolicy, Autoscaler
 from .backend import InlineBackend, InvocationBackend
 from .futures import ResponseFuture
@@ -87,6 +88,8 @@ class _Phase:
         self.started: Dict[int, float] = {}     # token -> dispatch time
         self.backups: Dict[str, bool] = {}
         self.busy: Dict[str, int] = {}          # worker -> in-flight count
+        self.span_done: set = set()   # iids whose pre-allocated invoke
+        #                               span id has been recorded
         self.futures: Dict[str, ResponseFuture] = {
             inv["payload"].invocation_id:
                 ResponseFuture(inv["payload"].invocation_id,
@@ -129,8 +132,14 @@ class ServerlessInvoker:
         # global train->score->detect barriers: a scoring action may
         # consume a version trained this cycle on a different worker, and
         # a detection compares against a band scored this cycle
-        for phase in (trains, scores, detects):
-            out.extend(self._run_phase(phase))
+        tracer = get_tracer()
+        for task, phase in (("train", trains), ("score", scores),
+                            ("detect", detects)):
+            if not phase:
+                continue
+            with tracer.span("serverless.phase", task=task,
+                             jobs=len(phase)):
+                out.extend(self._run_phase(phase))
         if self.autoscaler is not None:
             self.autoscaler.reap_idle()
         return out
@@ -225,6 +234,13 @@ class ServerlessInvoker:
             routed[w].append({"jobs": bjs, "ak": ak, "resolved": resolved,
                               "bands": bands})
         invocations: List[dict] = []
+        tracer = get_tracer()
+        # trace context of the enclosing phase/tick span: each invocation
+        # gets a PRE-ALLOCATED invoke-span id that rides the payload, so
+        # worker spans can parent under it before it is recorded (the
+        # span itself is recorded at settle time, when both endpoints of
+        # the dispatch->result interval are known)
+        tctx = tracer.current() if tracer.enabled else None
 
         def cut(worker: str, bins: List[dict]) -> None:
             self._seq += 1
@@ -253,14 +269,24 @@ class ServerlessInvoker:
                                  rank=fc.rank, lower=fc.lower,
                                  upper=fc.upper)
                     for fc in bands_.values())
+            span_id = trace_id = None
+            trace = None
+            if tracer.enabled:
+                span_id = tracer.allocate_id()
+                trace_id = (tctx["trace_id"] if tctx is not None
+                            else tracer.new_trace_id())
+                trace = {"trace_id": trace_id, "parent_id": span_id}
             payload = InvocationPayload(
                 invocation_id=f"inv-{self._seq:06d}",
                 jobs=tuple(JobRef.from_job(j) for j in jobs_),
                 versions=versions, bands=band_blobs,
-                created_at=time.time())
+                created_at=time.time(), trace=trace)
             invocations.append({"payload": payload, "worker": worker,
                                 "aks": [b["ak"] for b in bins],
-                                "resolved": resolved})
+                                "resolved": resolved,
+                                "span_id": span_id, "trace_id": trace_id,
+                                "parent_id": (tctx["parent_id"]
+                                              if tctx is not None else 0)})
 
         for w, bins in routed.items():
             cur: List[dict] = []
@@ -345,7 +371,9 @@ class ServerlessInvoker:
                 keep.append(inv)               # stuck on a busy preferred
                 continue                       # worker; later items may go
             token = next(state.tokens)
-            inv = {**inv, "worker": w, "token": token}
+            tr = get_tracer()
+            inv = {**inv, "worker": w, "token": token,
+                   "t_disp": tr.clock() if tr.enabled else 0.0}
             state.busy[w] = state.busy.get(w, 0) + 1
             state.started[token] = time.perf_counter()
             if self.autoscaler is not None:
@@ -440,6 +468,32 @@ class ServerlessInvoker:
                     self._settle(state, f)
                 self._maybe_backup(state)
 
+    def _trace_invoke(self, state: _Phase, inv: dict, *, ok: bool,
+                      worker: str, error: str = "") -> None:
+        """Record one ``serverless.invoke`` span per settled copy — the
+        1:1 twin of ``monitor.record`` (span counts == invocation
+        counts). The FIRST settled copy of an invocation claims the
+        pre-allocated span id the payload's trace context points at, so
+        worker spans stitch under it; later copies (retries, backups)
+        record fresh sibling ids under the same phase span."""
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return
+        payload = inv["payload"]
+        iid = payload.invocation_id
+        span_id = None
+        if iid not in state.span_done and inv.get("span_id") is not None:
+            state.span_done.add(iid)
+            span_id = inv["span_id"]
+        args = {"invocation_id": iid, "worker": worker, "ok": ok,
+                "jobs": payload.n_jobs, "attempt": payload.attempt}
+        if error:
+            args["error"] = error
+        tracer.record("serverless.invoke", inv.get("t_disp", 0.0),
+                      tracer.clock(), span_id=span_id,
+                      parent_id=inv.get("parent_id", 0) or 0,
+                      trace_id=inv.get("trace_id"), args=args)
+
     def _settle(self, state: _Phase, f) -> None:
         inv = state.pending.pop(f)
         payload = inv["payload"]
@@ -458,6 +512,8 @@ class ServerlessInvoker:
                 error=f"{type(e).__name__}: {e}",
                 retried=inv.get("retried", False),
                 speculative=inv.get("speculative", False))
+            self._trace_invoke(state, inv, ok=False, worker=inv["worker"],
+                               error=f"{type(e).__name__}: {e}")
             if iid in state.done_ids:
                 return                # a sibling copy already won
             if fut is not None and fut.cancelled:
@@ -493,12 +549,20 @@ class ServerlessInvoker:
             payload=payload, result=result, worker_id=result.worker_id,
             retried=inv.get("retried", False),
             speculative=inv.get("speculative", False))
+        self._trace_invoke(state, inv, ok=True, worker=result.worker_id)
         if iid in state.done_ids:
             return                    # speculation loser: effects already
         if fut is not None and fut.cancelled:   # deduped by stores
             self._finalize_cancel(state, inv)
             return
         state.done_ids.add(iid)
+        if result.spans:
+            # stitch the (process) worker's shipped spans under this
+            # invocation's pre-allocated invoke span; re-based onto this
+            # process's clock at the dispatch instant (worker and invoker
+            # monotonic clocks are not comparable)
+            get_tracer().absorb(list(result.spans),
+                                t_base=inv.get("t_disp"))
         state.durations.append(result.finished_at - result.started_at)
         for ak in inv["aks"]:         # affinity follows success
             self._affinity[ak] = result.worker_id

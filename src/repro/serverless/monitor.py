@@ -7,20 +7,37 @@ includes the container spawn, which is exactly what cold start means),
 and execution latency. ``summary()`` aggregates what the Table-3 sweep
 and ``Castor.stats()`` surface: cold/warm counts, sticky-routing warm
 reuse, aggregation factor actually achieved, latency percentiles.
+
+Per-invocation records live in a bounded ring (``max_records`` deep,
+ISSUE 10 satellite 1 — the old unbounded list was a slow leak at
+million-invocation scale): once full, each new record evicts the oldest
+and bumps ``dropped``. Percentile summaries therefore describe the most
+*recent* window, which is also what ``recent_queue_p95`` — the
+autoscaler's scale-out signal — wants; the running aggregates
+(``invocations``/``cold_starts``/...) remain exact lifetime totals.
+
+Each ``record()`` also lands in the global metrics registry
+(``serverless.*`` counters + queue/exec latency histograms), so the
+observability plane's Prometheus/JSON exports see invocation telemetry
+without touching the ring.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, List, Optional
+from collections import deque
+from itertools import islice
+from typing import Any, Dict, List
+
+from ..obs.metrics import get_metrics
 
 
 class InvocationMonitor:
     def __init__(self, max_records: int = 100_000):
         self.max_records = int(max_records)
         self._lock = threading.Lock()
-        self.records: List[Dict[str, Any]] = []
-        self.dropped = 0
-        # running aggregates (cheap even when records overflow)
+        self.records: deque = deque(maxlen=self.max_records)
+        self.dropped = 0                 # records evicted from the ring
+        # running aggregates (exact even after the ring wraps)
         self.invocations = 0
         self.cold_starts = 0
         self.warm_starts = 0
@@ -28,6 +45,18 @@ class InvocationMonitor:
         self.speculative = 0             # straggler backup copies
         self.jobs = 0
         self.failed_invocations = 0
+        # registry mirrors, resolved once (zero lookups per record)
+        m = get_metrics()
+        self._m_invocations = m.counter("serverless.invocations")
+        self._m_cold = m.counter("serverless.cold_starts")
+        self._m_warm = m.counter("serverless.warm_starts")
+        self._m_retries = m.counter("serverless.retries")
+        self._m_speculative = m.counter("serverless.speculative")
+        self._m_failed = m.counter("serverless.failed_invocations")
+        self._m_jobs = m.counter("serverless.jobs")
+        self._m_queue = m.histogram("serverless.queue_s")
+        self._m_exec_cold = m.histogram("serverless.exec_s.cold")
+        self._m_exec_warm = m.histogram("serverless.exec_s.warm")
 
     def record(self, *, payload, result=None, worker_id: str,
                error: str = "", retried: bool = False,
@@ -52,27 +81,44 @@ class InvocationMonitor:
         with self._lock:
             self.invocations += 1
             self.jobs += payload.n_jobs
+            self._m_invocations.inc()
+            self._m_jobs.inc(payload.n_jobs)
             if retried:
                 self.retries += 1
+                self._m_retries.inc()
             if speculative:
                 self.speculative += 1
+                self._m_speculative.inc()
             if result is None:
                 self.failed_invocations += 1
+                self._m_failed.inc()
             elif result.cold_start:
                 self.cold_starts += 1
+                self._m_cold.inc()
+                self._m_queue.observe(rec["queue_s"])
+                self._m_exec_cold.observe(rec["exec_s"])
             else:
                 self.warm_starts += 1
-            if len(self.records) < self.max_records:
-                self.records.append(rec)
-            else:
-                self.dropped += 1
+                self._m_warm.inc()
+                self._m_queue.observe(rec["queue_s"])
+                self._m_exec_warm.observe(rec["exec_s"])
+            if len(self.records) == self.max_records:
+                self.dropped += 1      # ring full: oldest record evicts
+            self.records.append(rec)
+
+    def _tail(self, window: int) -> List[Dict[str, Any]]:
+        """Last ``window`` records (lock held by caller)."""
+        n = len(self.records)
+        if window >= n:
+            return list(self.records)
+        return list(islice(self.records, n - window, n))
 
     def recent_queue_p95(self, window: int = 64) -> float:
         """p95 queue latency (enqueue -> worker pickup) over the last
         ``window`` successful invocations — the autoscaler's scale-out
         signal (``repro.serverless.autoscale``)."""
         with self._lock:
-            recs = self.records[-window:]
+            recs = self._tail(window)
         return self._pctl([r["queue_s"] for r in recs if r.get("ok")], 0.95)
 
     @staticmethod
@@ -93,6 +139,7 @@ class InvocationMonitor:
                 "speculative": self.speculative,
                 "failed_invocations": self.failed_invocations,
                 "jobs": self.jobs,
+                "records_dropped": self.dropped,
             }
         # derived ratios come from the SNAPSHOT, not the live counters —
         # a concurrent record() between here and the with-block above

@@ -155,6 +155,10 @@ class InvocationPayload:
     bands: Tuple[ForecastBlob, ...] = ()       # detect-phase artifacts
     created_at: float = 0.0                    # wall-clock enqueue time
     attempt: int = 1
+    # trace context ({"trace_id", "parent_id"}) riding the payload so a
+    # share-nothing worker's spans stitch under the invoker's trace —
+    # the cross-process half of the observability plane (obs/trace.py)
+    trace: Optional[Dict[str, int]] = None
 
     @property
     def n_jobs(self) -> int:
@@ -174,7 +178,8 @@ class InvocationPayload:
                    jobs=tuple(JobRef(**j) for j in d["jobs"]),
                    versions=tuple(VersionRef(**v) for v in d["versions"]),
                    bands=tuple(ForecastBlob(**b) for b in d.get("bands", ())),
-                   created_at=d["created_at"], attempt=d["attempt"])
+                   created_at=d["created_at"], attempt=d["attempt"],
+                   trace=d.get("trace"))
 
 
 @dataclass(frozen=True)
@@ -201,6 +206,11 @@ class InvocationResult:
     versions: Tuple[VersionRef, ...] = ()
     forecasts: Tuple[ForecastBlob, ...] = ()
     detections: Tuple[DetectionBlob, ...] = ()
+    # spans the worker process finished while executing this invocation
+    # (plain dicts from Tracer.export_since) — the invoker absorbs them
+    # into its own tracer to stitch one cross-process trace; empty for
+    # backends whose workers share the invoker's tracer (inline)
+    spans: Tuple[Dict[str, Any], ...] = ()
 
     def to_json(self) -> str:
         return json.dumps(_enc(asdict(self)))
@@ -217,7 +227,8 @@ class InvocationResult:
             versions=tuple(VersionRef(**v) for v in d["versions"]),
             forecasts=tuple(ForecastBlob(**f) for f in d["forecasts"]),
             detections=tuple(DetectionBlob(**x)
-                             for x in d.get("detections", ())))
+                             for x in d.get("detections", ())),
+            spans=tuple(d.get("spans", ())))
 
 
 #: process-wide intern table for affinity keys: the invoker's routing

@@ -22,10 +22,12 @@ from __future__ import annotations
 
 import os
 import time
+from dataclasses import replace
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from ..obs.trace import get_tracer
 from .chaos import ChaosKill, ChaosPolicy
 from .payload import (DetectionBlob, ForecastBlob, InvocationPayload,
                       InvocationResult, JobOutcome, JobRef, VersionRef)
@@ -50,6 +52,20 @@ class Worker:
 
     def execute(self, payload: InvocationPayload,
                 chaos: Optional[ChaosPolicy] = None) -> InvocationResult:
+        # stitch this worker's spans under the invoker's trace: the
+        # payload carries the invoker's (trace_id, invoke-span id); for
+        # the inline backend the spans land directly in the shared
+        # tracer, for the process backend they ship back on the result
+        tracer = get_tracer()
+        with tracer.adopt(payload.trace):
+            with tracer.span("worker.execute",
+                             invocation_id=payload.invocation_id,
+                             worker=self.worker_id,
+                             jobs=payload.n_jobs):
+                return self._execute(payload, chaos)
+
+    def _execute(self, payload: InvocationPayload,
+                 chaos: Optional[ChaosPolicy] = None) -> InvocationResult:
         started = time.time()
         cold = self.invocations == 0
         self.invocations += 1
@@ -188,7 +204,15 @@ def _process_worker_main(task_q, result_q, factory, worker_id: str,
             else:
                 payload = InvocationPayload.from_json(msg)
             iid = payload.invocation_id
+            # ship the spans this invocation finished back with the
+            # result: the invoker's tracer absorbs them (re-iding onto
+            # its own counter) so the cross-process trace stitches
+            tracer = get_tracer()
+            mark = tracer.mark()
             result = worker.execute(payload)
+            spans = tracer.export_since(mark)
+            if spans:
+                result = replace(result, spans=tuple(spans))
             if storage is not None:
                 key = put_result(storage, result, payload.attempt)
                 result_q.put(("result-ref", iid, key))

@@ -155,6 +155,14 @@ class TimeSeriesStore:
         exactly one (t, score) point on every sensor's anomaly series;
         N ``append()`` calls would pay N lock round-trips and N array
         coercions for scalar writes)."""
+        from ..obs.trace import get_tracer
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._append_points(ts_ids, times, values)
+        with tracer.span("store.append_points", n=len(ts_ids)):
+            return self._append_points(ts_ids, times, values)
+
+    def _append_points(self, ts_ids: Sequence[str], times, values) -> int:
         t = np.asarray(times, np.float64).ravel()
         v = np.asarray(values, np.float64).ravel()
         assert len(ts_ids) == t.size == v.size, (len(ts_ids), t.size, v.size)
@@ -324,6 +332,21 @@ class TimeSeriesStore:
         (late) appends race-free: if ``prior`` moved since the last poll,
         history changed behind the watermark and cached state is stale.
         """
+        from ..obs.trace import get_tracer
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._read_many(ts_ids, start, end, since=since,
+                                   prior_counts=prior_counts)
+        with tracer.span("store.read_many", n=len(ts_ids),
+                         delta=since is not None):
+            return self._read_many(ts_ids, start, end, since=since,
+                                   prior_counts=prior_counts)
+
+    def _read_many(self, ts_ids: Sequence[str],
+                   start: Optional[float] = None,
+                   end: Optional[float] = None, *,
+                   since: Optional[float] = None,
+                   prior_counts: bool = False):
         fast = since is not None
         if fast:
             start = since
@@ -369,6 +392,19 @@ class TimeSeriesStore:
         fleet-width caller would immediately re-concatenate (measurable
         at minutely detection width). Counts as one ``read_many`` (and
         one delta read with ``since=``) in telemetry."""
+        from ..obs.trace import get_tracer
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._read_many_flat(ts_ids, start, end, since=since)
+        with tracer.span("store.read_many", n=len(ts_ids),
+                         delta=since is not None, flat=True):
+            return self._read_many_flat(ts_ids, start, end, since=since)
+
+    def _read_many_flat(self, ts_ids: Sequence[str],
+                        start: Optional[float] = None,
+                        end: Optional[float] = None, *,
+                        since: Optional[float] = None
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         fast = since is not None
         if fast:
             start = since
